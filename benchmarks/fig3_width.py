@@ -1,0 +1,21 @@
+"""Fig. 3: wider MLPs DO improve SAC (width sweep at fixed depth 2).
+
+Paper: Ant-v2, layers=2, units in {128..2048}. Quick: pendulum, {16,64,256}.
+"""
+from benchmarks.common import bench_run, make_cfg
+
+
+def run(scale: str = "quick"):
+    units = [16, 64, 256] if scale == "quick" else [128, 256, 512, 1024, 2048]
+    rows = []
+    for nu in units:
+        cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=nu,
+                       num_layers=2, connectivity="mlp", use_ofenet=False,
+                       distributed=False, srank_every=150)
+        rows.append(bench_run(f"fig3_width_U{nu}", cfg, {"units": nu}))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

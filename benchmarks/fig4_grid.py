@@ -1,0 +1,24 @@
+"""Fig. 4: (units x layers) grid of max average return.
+
+Paper: 5x5 grid on Ant-v2. Quick: 2x2 {32,128} x {1,4} on pendulum.
+"""
+from benchmarks.common import bench_run, make_cfg
+
+
+def run(scale: str = "quick"):
+    units = [32, 128] if scale == "quick" else [128, 256, 512, 1024, 2048]
+    layers = [1, 4] if scale == "quick" else [1, 2, 4, 8, 16]
+    rows = []
+    for nu in units:
+        for nl in layers:
+            cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=nu,
+                           num_layers=nl, connectivity="mlp",
+                           use_ofenet=False, distributed=False)
+            rows.append(bench_run(f"fig4_grid_U{nu}_L{nl}", cfg,
+                                  {"units": nu, "layers": nl}))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

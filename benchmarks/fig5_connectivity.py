@@ -1,0 +1,24 @@
+"""Fig. 5: connectivity comparison (MLP / ResNet / DenseNet / D2RL) on small
+and large networks, with effective rank of the Q features.
+
+Paper: Ant-v2, S=128 / L=2048 units. Quick: pendulum, S=32 / L=128.
+"""
+from benchmarks.common import bench_run, make_cfg
+
+
+def run(scale: str = "quick"):
+    sizes = {"S": 32, "L": 128} if scale == "quick" else {"S": 128, "L": 2048}
+    rows = []
+    for tag, nu in sizes.items():
+        for conn in ("mlp", "resnet", "densenet", "d2rl"):
+            cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=nu,
+                           num_layers=2, connectivity=conn, use_ofenet=False,
+                           distributed=False, srank_every=150)
+            rows.append(bench_run(f"fig5_{conn}_{tag}", cfg,
+                                  {"connectivity": conn, "size": tag}))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,24 @@
+"""Fig. 6/7: decoupled representation learning (OFENet) vs w/o, across sizes.
+
+Paper: Ant-v2, S/M/L = 256/1024/2048 units. Quick: pendulum S/L = 32/128.
+"""
+from benchmarks.common import bench_run, make_cfg
+
+
+def run(scale: str = "quick"):
+    sizes = {"S": 32, "L": 128} if scale == "quick" else \
+        {"S": 256, "M": 1024, "L": 2048}
+    rows = []
+    for tag, nu in sizes.items():
+        for ofe in (False, True):
+            cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=nu,
+                           num_layers=2, connectivity="densenet",
+                           use_ofenet=ofe, distributed=False, srank_every=150)
+            name = f"fig6_{'ofenet' if ofe else 'scratch'}_{tag}"
+            rows.append(bench_run(name, cfg, {"ofenet": ofe, "size": tag}))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,27 @@
+"""Fig. 8/12: Ape-X-like distributed replay vs single-actor collection.
+
+Paper: grid over SAC x OFENet units with N_core=2 x N_env=32 actors.
+Quick: pendulum, S/L nets, 16 actors vs 1.
+"""
+from benchmarks.common import bench_run, make_cfg
+
+
+def run(scale: str = "quick"):
+    sizes = {"S": 32, "L": 128} if scale == "quick" else \
+        {"S": 256, "M": 1024, "L": 2048}
+    rows = []
+    for tag, nu in sizes.items():
+        for dist in (False, True):
+            cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=nu,
+                           num_layers=2, connectivity="densenet",
+                           use_ofenet=True, distributed=dist,
+                           n_core=2, n_env=16 if dist else 1)
+            name = f"fig8_{'apex' if dist else 'single'}_{tag}"
+            rows.append(bench_run(name, cfg, {"distributed": dist,
+                                              "size": tag}))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks: fused dense-block / flash-attention / SSD kernels
+in interpret mode vs jnp reference (correctness-weighted; wall time on CPU
+interpret mode is NOT TPU-indicative — the roofline table is; see
+EXPERIMENTS.md §Roofline)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return 1e6 * (time.time() - t0) / reps
+
+
+def run(scale: str = "quick"):
+    from repro.kernels.dense_block.ops import dense_concat_matmul, fused_dense_padded
+    from repro.kernels.dense_block.ref import dense_concat_matmul_ref
+    from repro.kernels.flash_attention.ops import gqa_flash
+    from repro.models.attention import plain_attention
+    rows = []
+    ks = jax.random.split(jax.random.key(0), 4)
+
+    # paper's DenseNet layer shapes (Table 2): stream 2159 -> 2048 units
+    parts = [jax.random.normal(ks[0], (64, 111)),
+             jax.random.normal(ks[1], (64, 2048))]
+    w = jax.random.normal(ks[2], (2159, 256)) * 0.02
+    t_kernel = _time(lambda *a: dense_concat_matmul(parts, w), None)
+    t_ref = _time(lambda *a: dense_concat_matmul_ref(parts, w), None)
+    err = float(jnp.max(jnp.abs(dense_concat_matmul(parts, w)
+                                - dense_concat_matmul_ref(parts, w))))
+    rows.append({"name": "kernel_dense_concat_2159x256",
+                 "us_per_call": t_kernel, "derived": f"maxerr={err:.2e}",
+                 "ref_us": t_ref})
+
+    q = jax.random.normal(ks[0], (1, 256, 8, 32))
+    k = jax.random.normal(ks[1], (1, 256, 4, 32))
+    v = jax.random.normal(ks[2], (1, 256, 4, 32))
+    t_kernel = _time(lambda *a: gqa_flash(q, k, v, bq=128, bkv=128), None)
+    err = float(jnp.max(jnp.abs(gqa_flash(q, k, v, bq=128, bkv=128)
+                                - plain_attention(q, k, v))))
+    rows.append({"name": "kernel_flash_attn_256_gqa",
+                 "us_per_call": t_kernel, "derived": f"maxerr={err:.2e}"})
+
+    from repro.kernels.ssd_scan.ops import ssd_chunked_kernel
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N = 2, 64, 4, 16, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    b = jax.random.normal(ks[1], (B, S, N))
+    c = jax.random.normal(ks[2], (B, S, N))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    log_a = jnp.linspace(0.0, 1.0, H)
+    dsk = jnp.ones((H,))
+    t_kernel = _time(lambda *a: ssd_chunked_kernel(x, b, c, dt, log_a, dsk,
+                                                   chunk=16)[0], None)
+    yk, _ = ssd_chunked_kernel(x, b, c, dt, log_a, dsk, chunk=16)
+    ym, _ = ssd_chunked(x, b, c, dt, log_a, chunk=16)
+    err = float(jnp.max(jnp.abs(yk - (ym + dsk[None, None, :, None] * x))))
+    rows.append({"name": "kernel_ssd_chunk_64", "us_per_call": t_kernel,
+                 "derived": f"maxerr={err:.2e}"})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,35 @@
+"""LM substrate throughput: reduced-arch train/decode steps per second on CPU
+(one row per family; production-mesh numbers live in the roofline table)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def run(scale: str = "quick"):
+    from repro.configs import get_config
+    from repro.models import Model
+    rows = []
+    archs = ["tinyllama-1.1b", "olmoe-1b-7b", "rwkv6-7b", "zamba2-1.2b"]
+    for arch in archs:
+        cfg = get_config(arch).reduced()
+        m = Model(cfg)
+        state = m.init_state(jax.random.key(0))
+        B, S = 4, 64
+        batch = {"tokens": jax.random.randint(jax.random.key(1), (B, S + 1),
+                                              0, cfg.vocab_size)}
+        step = jax.jit(m.train_step)
+        state, _ = step(state, batch)          # compile
+        t0 = time.time()
+        for _ in range(3):
+            state, metrics = step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        us = 1e6 * (time.time() - t0) / 3
+        rows.append({"name": f"lm_train_{arch}", "us_per_call": us,
+                     "derived": f"tok/s={B * S / (us / 1e6):.0f}"})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

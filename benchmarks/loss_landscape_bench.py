@@ -1,0 +1,58 @@
+"""Fig. 1b/3b/14: loss-surface sharpness of deep-vs-wide Q-networks.
+
+Trains a deep-narrow and a shallow-wide SAC agent, then measures the
+filter-normalized J_Q surface (paper A.3: frozen targets, replayed
+transitions, trained weights). Paper's claim: wide => flatter minimum.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run(scale: str = "quick"):
+    from benchmarks.common import make_cfg
+    from repro.core.loss_landscape import loss_surface, sharpness
+    from repro.rl.envs import make_env
+    from repro.rl.runner import _build, run_training
+    from repro.rl.sac import q_values
+
+    rows = []
+    shapes = {"deep": dict(num_units=32, num_layers=6),
+              "wide": dict(num_units=256, num_layers=2)}
+    for tag, shp in shapes.items():
+        cfg = make_cfg(scale, env="pendulum", algo="sac",
+                       connectivity="mlp", use_ofenet=False,
+                       distributed=False, n_env=1, keep_state=True, **shp)
+        env = make_env(cfg.env)
+        acfg, *_ = _build(cfg, env)
+        res = run_training(cfg)
+        state, batch = res.state, res.last_batch
+
+        # frozen targets from the trained target critics (paper A.3 / eq. 2-3)
+        q1_t, q2_t, _ = q_values(state["params"]["target_critics"],
+                                 state["params"], acfg,
+                                 batch["next_obs"], batch["act"])
+        q_hat = batch["rew"] + acfg.gamma * (1 - batch["done"]) * \
+            jnp.minimum(q1_t, q2_t)
+        q_hat = jax.lax.stop_gradient(q_hat)
+
+        def j_q(critics):
+            q1, q2, _ = q_values(critics, state["params"], acfg,
+                                 batch["obs"], batch["act"])
+            return 0.5 * jnp.mean((q1 - q_hat) ** 2)
+
+        _, _, surf = loss_surface(j_q, state["params"]["critics"],
+                                  jax.random.key(7), span=1.0, resolution=9)
+        rows.append({"name": f"landscape_{tag}",
+                     "us_per_call": 0.0,
+                     "derived": f"sharpness={sharpness(surf):.4f}",
+                     "loss_range": float(surf.max() - surf.min()),
+                     "return": res.max_return})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

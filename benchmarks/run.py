@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract and writes
+the full rows to experiments/bench_results.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale quick|paper] [--only fig5]
+"""
+import argparse
+import importlib
+import json
+import time
+from pathlib import Path
+
+MODULES = [
+    "benchmarks.fig1_depth",
+    "benchmarks.fig3_width",
+    "benchmarks.fig4_grid",
+    "benchmarks.fig5_connectivity",
+    "benchmarks.fig6_ofenet",
+    "benchmarks.fig8_distributed",
+    "benchmarks.fig10_ablation",
+    "benchmarks.fig13_activation",
+    "benchmarks.table1_final",
+    "benchmarks.loss_landscape_bench",
+    "benchmarks.kernels_micro",
+    "benchmarks.lm_substrate",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick", choices=["quick", "paper"])
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    mods = [m for m in MODULES if args.only in m] if args.only else MODULES
+    all_rows = []
+    print("name,us_per_call,derived")
+    for mod_name in mods:
+        t0 = time.time()
+        mod = importlib.import_module(mod_name)
+        try:
+            rows = mod.run(args.scale)
+        except Exception as e:  # keep the harness going
+            print(f"{mod_name},0,ERROR:{type(e).__name__}:{e}")
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+        all_rows.extend(rows)
+    out = Path("experiments/bench_results.json")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(all_rows, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

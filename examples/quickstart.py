@@ -1,0 +1,38 @@
+"""Quickstart: the paper's full technique on a small task, end to end.
+
+Trains a SAC agent with the three-fold method — (1) OFENet decoupled
+representation, (2) wide MLP-DenseNet policy/value nets, (3) Ape-X-style
+distributed collection — on the pure-JAX pendulum swing-up, and prints the
+effective-rank trace showing the rank-collapse mitigation (paper §4).
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 2000]
+"""
+import argparse
+
+from repro.rl import RunConfig, run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--units", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = RunConfig(
+        env="pendulum", algo="sac",
+        num_units=args.units, num_layers=2,       # wide-over-deep (§4.1)
+        connectivity="densenet",                  # MLP-DenseNet (§3.3)
+        use_ofenet=True, ofenet_layers=4, ofenet_units=32,   # §3.1
+        distributed=True, n_core=2, n_env=16,     # Ape-X-like (§3.2)
+        total_steps=args.steps, warmup_steps=300,
+        eval_every=max(args.steps // 8, 1), srank_every=max(args.steps // 8, 1),
+    )
+    res = run_training(cfg, progress=lambda s, r, m: print(
+        f"step {s:6d}  eval return {r:9.1f}  "
+        f"critic {m.get('critic_loss', 0):.3f}  aux {m.get('aux_loss', 0):.3f}"))
+    print(f"\nparams={res.param_count:,}  max return={res.max_return:.1f}")
+    print("effective-rank trace (srank of Q features):", res.sranks)
+
+
+if __name__ == "__main__":
+    main()

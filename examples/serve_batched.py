@@ -1,0 +1,11 @@
+"""Batched serving example: prefill + decode with KV/SSM caches across
+families (dense GQA cache, RWKV recurrent state, Mamba2 hybrid state).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main as serve_main
+
+for arch in ("tinyllama-1.1b", "rwkv6-7b", "zamba2-1.2b"):
+    print(f"\n=== {arch} (reduced) ===")
+    serve_main(["--arch", arch, "--reduced", "--batch", "4",
+                "--prompt-len", "8", "--gen", "16"])

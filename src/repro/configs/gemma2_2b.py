@@ -1,0 +1,12 @@
+"""gemma2-2b [dense] — local+global alternating attention, logit softcaps,
+post-norms, tied embeddings [arXiv:2408.00118]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2-2b", family="dense", source="arXiv:2408.00118",
+    num_layers=26, d_model=2304, num_heads=8, num_kv_heads=4,
+    head_dim=256, d_ff=9216, vocab_size=256000,
+    tie_embeddings=True, logit_softcap=30.0, attn_softcap=50.0,
+    sliding_window=4096, local_global_period=2, post_norms=True,
+    ffn_connectivity="glu", rope_theta=10000.0,
+)

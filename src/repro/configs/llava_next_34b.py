@@ -1,0 +1,12 @@
+"""llava-next-34b [vlm] — anyres tiling; vision tower is a STUB (input_specs
+supplies precomputed patch embeddings; projector implemented)
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]."""
+from repro.models.config import ArchConfig, FrontendConfig
+
+# anyres: base 576 patches + 4 tiles x 576 = 2880 patch embeddings
+CONFIG = ArchConfig(
+    name="llava-next-34b", family="vlm", source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=20480, vocab_size=64000, rope_theta=5000000.0,
+    frontend=FrontendConfig(kind="vision", num_embeddings=2880, embed_dim=1024),
+)

@@ -1,0 +1,9 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8, d_ff_expert=1024 [arXiv:2409.02060]."""
+from repro.models.config import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b", family="moe", source="arXiv:2409.02060",
+    num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1024, vocab_size=50304,
+    moe=MoEConfig(num_experts=64, top_k=8, d_ff_expert=1024),
+)

@@ -1,0 +1,8 @@
+"""qwen2.5-32b [dense] — GQA kv=8, QKV bias [hf:Qwen/Qwen2.5-0.5B]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-32b", family="dense", source="hf:Qwen/Qwen2.5-0.5B",
+    num_layers=64, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=27648, vocab_size=152064, qkv_bias=True, rope_theta=1000000.0,
+)

@@ -1,0 +1,26 @@
+"""Architecture registry: --arch <id> resolution."""
+from importlib import import_module
+from typing import Dict
+
+from repro.models.config import ArchConfig
+
+_MODULES: Dict[str, str] = {
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "whisper-small": "repro.configs.whisper_small",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "yi-6b": "repro.configs.yi_6b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    return import_module(_MODULES[name]).CONFIG

@@ -1,0 +1,10 @@
+"""rwkv6-7b "Finch" [ssm] — attention-free, data-dependent decay
+[arXiv:2404.05892]."""
+from repro.models.config import ArchConfig, RWKVConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b", family="ssm", source="arXiv:2404.05892",
+    num_layers=32, d_model=4096, num_heads=64, num_kv_heads=64,
+    d_ff=14336, vocab_size=65536,
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64),
+)

@@ -1,0 +1,8 @@
+"""tinyllama-1.1b [dense] — llama2-arch small, GQA kv=4 [arXiv:2401.02385]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="tinyllama-1.1b", family="dense", source="arXiv:2401.02385",
+    num_layers=22, d_model=2048, num_heads=32, num_kv_heads=4,
+    d_ff=5632, vocab_size=32000, rope_theta=10000.0,
+)

@@ -1,0 +1,11 @@
+"""whisper-small [audio] — enc-dec; conv/mel frontend is a STUB (input_specs
+supplies precomputed frame embeddings) [arXiv:2212.04356]."""
+from repro.models.config import ArchConfig, EncDecConfig, FrontendConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small", family="encdec", source="arXiv:2212.04356",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+    d_ff=3072, vocab_size=51865, qkv_bias=True, tie_embeddings=True,
+    encdec=EncDecConfig(encoder_layers=12, encoder_seq=1500),
+    frontend=FrontendConfig(kind="audio", num_embeddings=1500, embed_dim=768),
+)

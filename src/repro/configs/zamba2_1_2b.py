@@ -1,0 +1,13 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention block applied
+periodically with concat-embedding input; attention sliding-window 4096 at
+long context (DESIGN.md adaptation) [arXiv:2411.15242]."""
+from repro.models.config import ArchConfig, HybridConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid", source="arXiv:2411.15242",
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32000, sliding_window=4096,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4,
+                  chunk_size=256),
+    hybrid=HybridConfig(attn_every=6, concat_embedding=True),
+)

@@ -1,0 +1,12 @@
+"""Core: the paper's contribution — wide DenseNet connectivity, decoupled
+representation learning (OFENet), and analysis metrics (effective rank,
+loss-landscape sharpness)."""
+from repro.core.blocks import CONNECTIVITIES, MLPBlockConfig, mlp_block_apply, mlp_block_init
+from repro.core.effective_rank import effective_rank, srank_curve
+from repro.core.ofenet import OFENetConfig, aux_loss, features, ofenet_init, target_update
+
+__all__ = [
+    "CONNECTIVITIES", "MLPBlockConfig", "mlp_block_apply", "mlp_block_init",
+    "effective_rank", "srank_curve",
+    "OFENetConfig", "aux_loss", "features", "ofenet_init", "target_update",
+]

@@ -1,0 +1,155 @@
+"""Connectivity zoo from the paper (§3.3, §4.2).
+
+Four connectivity patterns over an MLP stack, selectable per config:
+
+* ``mlp``      — plain feed-forward:          y_i = f_i(y_{i-1})
+* ``resnet``   — identity skip:               y_i = f_i(y_{i-1}) + y_{i-1}
+* ``densenet`` — original DenseNet concat:    y_i = f_i([y_0, y_1, ..., y_{i-1}])
+                 (the paper's proposed architecture; concatenation of *all*
+                 previous outputs, exactly as OFENet/Ota et al. 2020)
+* ``d2rl``     — Sinha et al. 2020:           y_i = f_i([y_{i-1}, y_0])
+                 (re-concat the *input* at every hidden layer, not the stream)
+
+``f_i`` is Dense -> (optional BatchNorm) -> activation. The paper omits BN for
+SAC agents and uses Swish activations; both are config options here.
+
+BatchNorm under data parallelism: when ``axis_name`` is given to ``apply``,
+batch statistics are psum-reduced across that mesh axis (the paper is
+single-GPU; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Params, PRNGKey, dense_apply, dense_init, get_activation
+
+CONNECTIVITIES = ("mlp", "resnet", "densenet", "d2rl")
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPBlockConfig:
+    in_dim: int
+    num_layers: int
+    num_units: int
+    connectivity: str = "densenet"
+    activation: str = "swish"
+    batch_norm: bool = False
+    out_dim: Optional[int] = None          # if set, append a linear output layer
+    final_activation: str = "identity"
+
+    def __post_init__(self):
+        if self.connectivity not in CONNECTIVITIES:
+            raise ValueError(f"connectivity must be one of {CONNECTIVITIES}")
+
+    def layer_in_dims(self) -> Tuple[int, ...]:
+        """Input width of each hidden layer under this connectivity."""
+        dims = []
+        d = self.in_dim
+        for i in range(self.num_layers):
+            dims.append(d)
+            if self.connectivity == "densenet":
+                d = d + self.num_units              # stream grows by one layer output
+            elif self.connectivity == "d2rl":
+                d = self.num_units + self.in_dim    # hidden + original input
+            else:
+                d = self.num_units
+        return tuple(dims)
+
+    @property
+    def feature_dim(self) -> int:
+        """Width of the feature emitted before the (optional) output layer."""
+        if self.num_layers == 0:
+            return self.in_dim
+        if self.connectivity == "densenet":
+            return self.in_dim + self.num_layers * self.num_units
+        return self.num_units
+
+
+def _bn_init(dim: int) -> Params:
+    return {
+        "scale": jnp.ones((dim,)), "bias": jnp.zeros((dim,)),
+        "mean": jnp.zeros((dim,)), "var": jnp.ones((dim,)),
+    }
+
+
+def _bn_apply(p: Params, x: jax.Array, *, train: bool, axis_name: Optional[str],
+              momentum: float = 0.99, eps: float = 1e-5):
+    """BatchNorm with running stats; returns (y, new_stats)."""
+    if train:
+        mean = jnp.mean(x, axis=tuple(range(x.ndim - 1)))
+        var = jnp.mean(jnp.square(x), axis=tuple(range(x.ndim - 1))) - mean ** 2
+        if axis_name is not None:
+            mean = jax.lax.pmean(mean, axis_name)
+            var = jax.lax.pmean(var, axis_name)
+        new_stats = {
+            "mean": momentum * p["mean"] + (1 - momentum) * mean,
+            "var": momentum * p["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = p["mean"], p["var"]
+        new_stats = {"mean": p["mean"], "var": p["var"]}
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y, new_stats
+
+
+def mlp_block_init(key: PRNGKey, cfg: MLPBlockConfig) -> Params:
+    keys = jax.random.split(key, cfg.num_layers + 1)
+    layers = []
+    for i, d_in in enumerate(cfg.layer_in_dims()):
+        p: Params = {"dense": dense_init(keys[i], d_in, cfg.num_units)}
+        if cfg.batch_norm:
+            p["bn"] = _bn_init(cfg.num_units)
+        layers.append(p)
+    params: Params = {"layers": layers}
+    if cfg.out_dim is not None:
+        params["out"] = dense_init(keys[-1], cfg.feature_dim, cfg.out_dim)
+    return params
+
+
+def mlp_block_apply(params: Params, cfg: MLPBlockConfig, x: jax.Array, *,
+                    train: bool = True, axis_name: Optional[str] = None
+                    ) -> Tuple[jax.Array, jax.Array, Params]:
+    """Run the block.
+
+    Returns ``(output, feature, new_params)`` where ``feature`` is the
+    penultimate representation (used for effective-rank measurements and by
+    OFENet consumers) and ``new_params`` carries refreshed BN running stats
+    (identical to ``params`` when BN is off).
+    """
+    act = get_activation(cfg.activation)
+    stream = x                       # densenet running concat stream
+    h = x
+    new_layers = []
+    for i, layer in enumerate(params["layers"]):
+        if cfg.connectivity == "densenet":
+            inp = stream
+        elif cfg.connectivity == "d2rl" and i > 0:
+            inp = jnp.concatenate([h, x], axis=-1)
+        else:
+            inp = h
+        y = dense_apply(layer["dense"], inp)
+        new_layer = dict(layer)
+        if cfg.batch_norm:
+            y, stats = _bn_apply(layer["bn"], y, train=train, axis_name=axis_name)
+            new_layer["bn"] = {**layer["bn"], **stats}
+        y = act(y)
+        if cfg.connectivity == "resnet" and h.shape[-1] == y.shape[-1]:
+            y = y + h
+        h = y
+        if cfg.connectivity == "densenet":
+            stream = jnp.concatenate([stream, y], axis=-1)
+        new_layers.append(new_layer)
+
+    feature = stream if cfg.connectivity == "densenet" else h
+    if cfg.num_layers == 0:
+        feature = x
+    out = feature
+    if cfg.out_dim is not None:
+        out = dense_apply(params["out"], feature)
+        out = get_activation(cfg.final_activation)(out)
+    new_params = {**params, "layers": new_layers}
+    return out, feature, new_params

@@ -1,0 +1,27 @@
+"""Effective rank srank_delta (Kumar et al. 2021), the paper's §4 metric.
+
+    srank_delta(Phi) = min{ k : sum_{i<=k} sigma_i / sum_i sigma_i >= 1 - delta }
+
+Phi is the feature matrix of the penultimate layer of a Q-network evaluated
+on a batch of transitions. Rank collapse (low srank) correlates with poor RL
+performance; the paper shows DenseNet + OFENet + distributed replay mitigate it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def effective_rank(features: jax.Array, delta: float = 0.01) -> jax.Array:
+    """srank of a (batch, dim) feature matrix. Returns an int32 scalar."""
+    if features.ndim != 2:
+        features = features.reshape(-1, features.shape[-1])
+    sigma = jnp.linalg.svd(features.astype(jnp.float32), compute_uv=False)
+    total = jnp.sum(sigma)
+    cum = jnp.cumsum(sigma) / jnp.maximum(total, 1e-12)
+    # first index where cumulative mass >= 1 - delta (1-based rank)
+    return (jnp.argmax(cum >= 1.0 - delta) + 1).astype(jnp.int32)
+
+
+def srank_curve(features: jax.Array, deltas=(0.1, 0.05, 0.01)) -> dict:
+    return {d: int(effective_rank(features, d)) for d in deltas}

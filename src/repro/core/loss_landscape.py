@@ -1,0 +1,78 @@
+"""Loss-landscape visualization (Li et al. 2018 filter normalization), paper A.3.
+
+Produces the 2-D surface of a loss L(theta + a*d1 + b*d2) where d1, d2 are
+random Gaussian directions *filter-normalized* per parameter tensor:
+each direction tensor is rescaled so its norm matches the corresponding
+parameter tensor's norm (per output-filter for matrices, per-tensor otherwise).
+
+The paper uses this on J_Q (eq. 2-3) with frozen target values to show that
+wide Q-networks sit in near-convex basins while deep ones are sharp/chaotic.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _filter_normalize(direction: Any, params: Any) -> Any:
+    def norm_one(d, p):
+        d = d.astype(jnp.float32)
+        p = p.astype(jnp.float32)
+        if p.ndim >= 2:
+            # per output-filter (last axis) normalization
+            axes = tuple(range(p.ndim - 1))
+            dn = jnp.sqrt(jnp.sum(d * d, axis=axes, keepdims=True)) + 1e-10
+            pn = jnp.sqrt(jnp.sum(p * p, axis=axes, keepdims=True))
+            return d / dn * pn
+        dn = jnp.linalg.norm(d) + 1e-10
+        return d / dn * jnp.linalg.norm(p)
+    return jax.tree_util.tree_map(norm_one, direction, params)
+
+
+def random_direction(key: jax.Array, params: Any) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    d = [jax.random.normal(k, l.shape, jnp.float32) for k, l in zip(keys, leaves)]
+    return _filter_normalize(jax.tree_util.tree_unflatten(treedef, d), params)
+
+
+def loss_surface(loss_fn: Callable[[Any], jax.Array], params: Any, key: jax.Array,
+                 *, span: float = 1.0, resolution: int = 11
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Evaluate loss on a (resolution x resolution) grid in a random 2-D slice.
+
+    Returns (alphas, betas, surface) as numpy arrays; surface[i, j] is the
+    loss at alpha=alphas[i], beta=betas[j].
+    """
+    k1, k2 = jax.random.split(key)
+    d1 = random_direction(k1, params)
+    d2 = random_direction(k2, params)
+
+    @jax.jit
+    def at(a: jax.Array, b: jax.Array) -> jax.Array:
+        shifted = jax.tree_util.tree_map(
+            lambda p, x, y: p + a * x + b * y, params, d1, d2)
+        return loss_fn(shifted)
+
+    alphas = np.linspace(-span, span, resolution)
+    betas = np.linspace(-span, span, resolution)
+    surf = np.zeros((resolution, resolution))
+    for i, a in enumerate(alphas):
+        for j, b in enumerate(betas):
+            surf[i, j] = float(at(jnp.float32(a), jnp.float32(b)))
+    return alphas, betas, surf
+
+
+def sharpness(surface: np.ndarray) -> float:
+    """Simple scalar summary: mean absolute discrete Laplacian of log-loss.
+
+    Higher = sharper/less convex basin; used by benchmarks to compare deep
+    vs wide Q-networks quantitatively (the paper compares plots visually).
+    """
+    s = np.log(np.maximum(surface, 1e-12))
+    lap = (s[2:, 1:-1] + s[:-2, 1:-1] + s[1:-1, 2:] + s[1:-1, :-2]
+           - 4 * s[1:-1, 1:-1])
+    return float(np.mean(np.abs(lap)))

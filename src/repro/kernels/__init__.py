@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the compute hot spots (validated on CPU via
+# interpret=True): the paper's wide-DenseNet dense layer (fused
+# concat-matmul-swish), flash attention for the transformer substrate's
+# prefill path, and the Mamba2 SSD intra-chunk dual form.

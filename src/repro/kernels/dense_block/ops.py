@@ -1,0 +1,59 @@
+"""Jit'd wrappers around the fused dense kernel.
+
+``dense_concat_matmul`` is the DenseNet-specific entry point: the concat of
+the stream segments NEVER materializes — W is split row-wise per segment and
+the kernel accumulates partial products (the final add + activation is one
+fused elementwise pass). Segment widths are padded to the K block size.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dense_block.dense_block import fused_dense
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    r = x.shape[axis] % mult
+    if r == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, mult - r)
+    return jnp.pad(x, pad)
+
+
+def fused_dense_padded(x: jax.Array, w: jax.Array,
+                       b: Optional[jax.Array] = None, *,
+                       activation: str = "swish", bm: int = 128,
+                       bn: int = 128, bk: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """fused_dense with automatic (M, K, N) padding."""
+    m, n = x.shape[0], w.shape[1]
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    bp = None if b is None else _pad_to(b, bn, 0)
+    out = fused_dense(xp, wp, bp, activation=activation, bm=bm, bn=bn, bk=bk,
+                      interpret=interpret)
+    return out[:m, :n]
+
+
+def dense_concat_matmul(parts: Sequence[jax.Array], w: jax.Array,
+                        b: Optional[jax.Array] = None, *,
+                        activation: str = "swish", interpret: bool = True
+                        ) -> jax.Array:
+    """act(concat(parts, -1) @ w + b) without materializing the concat."""
+    offs, acc = 0, None
+    for i, part in enumerate(parts):
+        k = part.shape[-1]
+        w_i = w[offs:offs + k]
+        offs += k
+        last = i == len(parts) - 1
+        y = fused_dense_padded(
+            part, w_i, b if last else None,
+            activation="identity", interpret=interpret).astype(jnp.float32)
+        acc = y if acc is None else acc + y
+    assert offs == w.shape[0], (offs, w.shape)
+    from repro.common import get_activation
+    return get_activation(activation)(acc).astype(parts[0].dtype)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused dense kernel and the DenseNet concat-matmul."""
+import jax
+import jax.numpy as jnp
+
+from repro.common import get_activation
+
+
+def fused_dense_ref(x, w, b=None, activation="swish"):
+    y = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return get_activation(activation)(y).astype(x.dtype)
+
+
+def dense_concat_matmul_ref(parts, w, b=None, activation="swish"):
+    """The paper's DenseNet layer: act(concat(parts) @ w + b)."""
+    return fused_dense_ref(jnp.concatenate(parts, axis=-1), w, b, activation)

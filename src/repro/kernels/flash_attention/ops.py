@@ -1,0 +1,24 @@
+"""Jit'd GQA wrapper: folds (batch, heads) and broadcasts KV groups so the
+model's (B, S, H, hd) layout drives the flash kernel directly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def gqa_flash(q: jax.Array, k: jax.Array, v: jax.Array, *, causal=True,
+              window=0, softcap=0.0, bq=128, bkv=128, interpret=True):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * H, k.shape[1], hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(
+        B * H, v.shape[1], hd)
+    o = flash_attention(qf, kf, vf, causal=causal, window=window,
+                        softcap=softcap, bq=bq, bkv=bkv, interpret=interpret)
+    return o.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

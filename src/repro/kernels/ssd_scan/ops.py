@@ -1,0 +1,55 @@
+"""Jit'd wrapper: full chunked SSD built on the intra-chunk kernel.
+
+The chunk-to-chunk state recurrence (O(n_chunks), sequential) stays in
+lax.scan; each chunk's heavy compute goes through ``ssd_chunk_dual``.
+Numerically identical to models/ssm.ssd_chunked (+ D-skip fused here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_chunk_dual
+
+
+def ssd_chunked_kernel(x, b, c, dt, log_a, d_skip, *, chunk: int,
+                       interpret: bool = True):
+    """x: (B,S,H,P); b, c: (B,S,N); dt: (B,S,H); log_a, d_skip: (H,).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    nc = S // chunk
+    a = jnp.exp(log_a.astype(jnp.float32))
+    dt = dt.astype(jnp.float32)
+    lg = (-dt * a).reshape(B, nc, chunk, H)
+    cum = jnp.cumsum(lg, axis=2)
+    total = cum[:, :, -1, :]
+
+    bs = b.reshape(B, nc, chunk, N).astype(jnp.float32)
+    cs = c.reshape(B, nc, chunk, N).astype(jnp.float32)
+    xs = x.reshape(B, nc, chunk, H, P)
+    dts = dt.reshape(B, nc, chunk, H)
+
+    # chunk state contributions + carried-state scan (same as models/ssm.py)
+    w = jnp.exp(total[:, :, None] - cum) * dts
+    chunk_state = jnp.einsum("bnsh,bnsk,bnshp->bnhpk", w, bs,
+                             xs.astype(jnp.float32))
+    dec = jnp.exp(total)
+
+    def step(s, inp):
+        d, cst = inp
+        return s * d[..., None, None] + cst, s
+    final, prevs = jax.lax.scan(
+        step, jnp.zeros((B, H, P, N), jnp.float32),
+        (dec.transpose(1, 0, 2), chunk_state.transpose(1, 0, 2, 3, 4)))
+    prevs = prevs.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
+
+    G = B * nc
+    y = ssd_chunk_dual(
+        cs.reshape(G, chunk, N), bs.reshape(G, chunk, N),
+        xs.transpose(0, 1, 3, 2, 4).reshape(G, H, chunk, P),
+        cum.transpose(0, 1, 3, 2).reshape(G, H, chunk),
+        dts.transpose(0, 1, 3, 2).reshape(G, H, chunk),
+        prevs.reshape(G, H, P, N), d_skip, interpret=interpret)
+    y = y.reshape(B, nc, H, chunk, P).transpose(0, 1, 3, 2, 4)
+    return y.reshape(B, S, H, P).astype(x.dtype), final

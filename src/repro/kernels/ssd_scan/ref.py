@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the SSD intra-chunk dual-form kernel."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssd_chunk_dual_ref(c, b, x, cum, dt, state_in, d_skip):
+    """Shapes as in ssd_scan.ssd_chunk_dual; float64 numpy reference."""
+    G, Q, N = c.shape
+    H, P = x.shape[1], x.shape[-1]
+    c, b, x = np.asarray(c, np.float64), np.asarray(b, np.float64), \
+        np.asarray(x, np.float64)
+    cum, dt = np.asarray(cum, np.float64), np.asarray(dt, np.float64)
+    state_in = np.asarray(state_in, np.float64)
+    d_skip = np.asarray(d_skip, np.float64)
+    y = np.zeros((G, H, Q, P))
+    for g in range(G):
+        scores = c[g] @ b[g].T
+        for h in range(H):
+            rel = cum[g, h][:, None] - cum[g, h][None, :]
+            mask = np.tril(np.ones((Q, Q), bool))
+            m = np.where(mask, scores * np.exp(rel) * dt[g, h][None, :], 0.0)
+            y[g, h] = m @ x[g, h] \
+                + np.exp(cum[g, h])[:, None] * (c[g] @ state_in[g, h].T) \
+                + d_skip[h] * x[g, h]
+    return y

@@ -1,0 +1,74 @@
+"""SSD intra-chunk kernel (Mamba2 dual form) — zamba2's backbone hot spot.
+
+Computes, for one chunk of length Q per (batch-chunk, head) grid cell:
+
+    M[t,s] = (c_t . b_s) * exp(cum_t - cum_s) * dt_s      (s <= t)
+    y      = M @ x  +  exp(cum) * (c . state_in)  + D * x
+
+i.e. the full SSD chunk output INCLUDING the carried-state contribution; the
+chunk-to-chunk state recurrence itself stays outside (it's O(n_chunks) and
+sequential). Everything here is (Q,N)/(Q,Q)/(Q,P) MXU work held in VMEM —
+Q=256, N=64, P=64 => ~0.7 MB of operands per cell.
+
+Mask-before-exp (exp(-inf)=0) keeps gradients clean, mirroring ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, b_ref, x_ref, cum_ref, dt_ref, state_ref, dskip_ref,
+            o_ref):
+    c = c_ref[0].astype(jnp.float32)                 # (Q, N)
+    b = b_ref[0].astype(jnp.float32)                 # (Q, N)
+    x = x_ref[0, 0].astype(jnp.float32)              # (Q, P)
+    cum = cum_ref[0, 0].astype(jnp.float32)          # (Q,)
+    dt = dt_ref[0, 0].astype(jnp.float32)            # (Q,)
+    state = state_ref[0, 0].astype(jnp.float32)      # (P, N)
+
+    q = c.shape[0]
+    scores = c @ b.T                                 # (Q, Q)
+    rel = cum[:, None] - cum[None, :]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    rel = jnp.where(s_idx <= t_idx, rel, -jnp.inf)
+    m = scores * jnp.exp(rel) * dt[None, :]
+    y = m @ x                                        # intra-chunk
+    y += jnp.exp(cum)[:, None] * (c @ state.T)       # carried state
+    y += dskip_ref[0, 0] * x                         # D skip
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_dual(c: jax.Array, b: jax.Array, x: jax.Array, cum: jax.Array,
+                   dt: jax.Array, state_in: jax.Array, d_skip: jax.Array, *,
+                   interpret: bool = True) -> jax.Array:
+    """Per-(cell, head) chunk outputs.
+
+    c, b: (G, Q, N); x: (G, H, Q, P); cum, dt: (G, H, Q);
+    state_in: (G, H, P, N); d_skip: (H,). G = batch*n_chunks.
+    Returns y: (G, H, Q, P).
+    """
+    G, Q, N = c.shape
+    H, Pd = x.shape[1], x.shape[-1]
+    grid = (G, H)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, 1, Q, Pd), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q), lambda g, h: (g, h, 0)),
+            pl.BlockSpec((1, 1, Q), lambda g, h: (g, h, 0)),
+            pl.BlockSpec((1, 1, Pd, N), lambda g, h: (g, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda g, h: (0, h)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q, Pd), lambda g, h: (g, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, H, Q, Pd), x.dtype),
+        interpret=interpret,
+    )(c, b, x, cum, dt, state_in, d_skip.reshape(1, H))

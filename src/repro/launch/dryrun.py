@@ -1,0 +1,317 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# CPU-backend LLVM codegen dominates compile time at 512-way SPMD and is
+# irrelevant to the dry-run artifacts; always skip the expensive LLVM passes.
+# REPRO_XLA_FAST=1 additionally drops the backend opt level (fastest, but
+# "bytes accessed" is then un-fused and over-reported; default keeps fusion).
+os.environ["XLA_FLAGS"] += " --xla_llvm_disable_expensive_passes=true"
+if os.environ.get("REPRO_XLA_FAST", "0") == "1":
+    os.environ["XLA_FLAGS"] += " --xla_backend_optimization_level=0" 
+"""Multi-pod dry-run launcher (deliverables e + g).
+
+Per (architecture x input shape x mesh) this runs TWO measurements:
+
+1. PRODUCTION compile — the real scanned/remat config, full layer count,
+   lowered + compiled against the production mesh with ShapeDtypeStruct
+   stand-ins (no allocation). Proves the distribution config is coherent
+   and yields ``memory_analysis`` (the fits-in-HBM evidence).
+
+2. COST extrapolation — XLA's ``cost_analysis`` counts a while-loop body
+   once regardless of trip count, so scanned models under-report FLOPs,
+   bytes and collective traffic. We therefore compile two SMALL-L variants
+   (L = 2g and 4g, g = the arch's layer-pattern granularity) with layers
+   AND inner scans unrolled, then extrapolate linearly in L to the full
+   depth. Both raw and extrapolated numbers land in the JSON.
+
+NOTE: the XLA_FLAGS lines above MUST run before any other import (jax locks
+the device count on first init) — hence their position above the docstring.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      [--multi-pod] [--out experiments/dryrun] [--opts triangle_attention]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model, get_shape
+from repro.models.config import INPUT_SHAPES
+from repro.models import sharding as shd
+from repro.models.transformer import ForwardOptions
+from repro.roofline.analysis import Roofline, collective_bytes_from_hlo, model_flops
+
+P = jax.sharding.PartitionSpec
+
+
+def _specs_like(tree, mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=jax.sharding.NamedSharding(mesh, spec)),
+        tree, spec_tree)
+
+
+def _granularity(cfg) -> int:
+    if cfg.local_global_period:
+        return cfg.local_global_period
+    if cfg.family == "hybrid":
+        return cfg.hybrid.attn_every
+    return 1
+
+
+def _with_layers(cfg, n: int):
+    changes = {"num_layers": n}
+    if cfg.encdec is not None:
+        changes["encdec"] = dataclasses.replace(cfg.encdec, encoder_layers=n)
+    return dataclasses.replace(cfg, **changes)
+
+
+def _compile_once(cfg, shape, mesh, fo, microbatches, serve_sharding=False):
+    """Lower + compile one step function; return raw measurement dict."""
+    model = Model(cfg)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    # serve_sharding normally targets inference shapes; allowing it on train
+    # lowerings is a §Perf diagnostic (isolates FSDP-induced collectives)
+    pspecs = shd.param_specs(params_shape, mesh, serve=serve_sharding)
+    params_in = _specs_like(params_shape, mesh, pspecs)
+    batch_shape = model.input_specs(shape)
+    batch_in = _specs_like(batch_shape, mesh,
+                           shd.batch_specs(batch_shape, mesh))
+    t0 = time.time()
+    with mesh:
+        if shape.mode == "train":
+            state_shape = jax.eval_shape(
+                lambda: model.init_state(jax.random.key(0)))
+            sspecs = {"params": pspecs,
+                      "opt": {"mu": pspecs, "nu": pspecs, "count": P()},
+                      "step": P()}
+            state_in = _specs_like(state_shape, mesh, sspecs)
+            fn = jax.jit(lambda st, b: model.train_step(
+                st, b, fo, microbatches=microbatches))
+            lowered = fn.lower(state_in, batch_in)
+        elif shape.mode == "prefill":
+            fn = jax.jit(lambda p, b: model.prefill(p, b, fo))
+            lowered = fn.lower(params_in, batch_in)
+        else:
+            cache_shape = model.cache_specs(shape)
+            cspecs = shd.cache_specs(cache_shape, mesh)
+            caches_in = _specs_like(cache_shape, mesh, cspecs)
+            fn = jax.jit(lambda p, c, b: model.decode_step(p, c, b, fo))
+            lowered = fn.lower(params_in, caches_in, batch_in)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    colls = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collectives": colls,
+        "collective_bytes": sum(colls.values()),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "arg_bytes": float(ma.argument_size_in_bytes),
+        "out_bytes": float(ma.output_size_in_bytes),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": str(ma),
+    }
+
+
+def auto_microbatches(cfg) -> int:
+    """Default gradient-accumulation depth so train_4k activations fit HBM."""
+    if cfg.family == "encdec":
+        # cross-attention scores (S_dec x 1500 frames) per decoder layer blow
+        # up with per-device batch; whisper at train_4k needs deep accumulation
+        return 16
+    if cfg.d_model >= 5120:
+        return 16
+    if cfg.d_model >= 4096:
+        return 8
+    if cfg.d_model >= 2048:
+        return 4
+    return 2
+
+
+def _pad_groups(cfg, n_model: int = 16) -> int:
+    """Smallest padded group size G_p >= G with (KV * G_p) % n_model == 0."""
+    kv = cfg.num_kv_heads
+    g = cfg.num_heads // kv
+    gp = g
+    while (kv * gp) % n_model:
+        gp += 1
+    return gp
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               opts_flags=(), microbatches: int = 0, cost_extrapolate=True,
+               serve_sharding: bool = False, pad_heads: bool = False,
+               verbose: bool = True):
+    cfg = get_config(arch)
+    if pad_heads and cfg.mla is None and cfg.family not in ("ssm",):
+        cfg = dataclasses.replace(cfg, attn_group_pad=_pad_groups(cfg))
+    if microbatches == 0:
+        microbatches = auto_microbatches(cfg)
+    shape = get_shape(shape_name)
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return {"arch": arch, "shape": shape.name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "skipped": "full-attention arch; sub-quadratic decode "
+                           "required (DESIGN.md shape coverage)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    fo = ForwardOptions(mesh=mesh, long_decode=(shape.name == "long_500k"),
+                        **{k: True for k in opts_flags})
+
+    # ---- phase 1: production compile ----------------------------------
+    mb = microbatches if shape.mode == "train" else 1
+    # each microbatch's global batch must stay divisible by the batch axes
+    n_batch = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            n_batch *= mesh.shape[a]
+    mb = max(1, min(mb, shape.global_batch // n_batch))
+    prod = _compile_once(cfg, shape, mesh, fo, mb, serve_sharding)
+    if verbose:
+        print(f"--- {arch} x {shape.name} on {mesh_name} (production) ---")
+        print("memory_analysis:", prod["memory_analysis"])
+
+    # ---- phase 2: cost extrapolation -----------------------------------
+    extrap = None
+    if cost_extrapolate:
+        g = _granularity(cfg)
+        l1, l2 = 2 * g, 4 * g
+        fo_cost = dataclasses.replace(fo, unroll_scans=True)
+        runs = {}
+        for ln in (l1, l2):
+            c = _with_layers(dataclasses.replace(cfg, scan_layers=False), ln)
+            runs[ln] = _compile_once(c, shape, mesh, fo_cost, 1, serve_sharding)
+
+        L = cfg.num_layers
+
+        def lin(key):
+            a, b = runs[l1][key], runs[l2][key]
+            slope = (b - a) / (l2 - l1)
+            return max(a + slope * (L - l1), 0.0)
+
+        coll_kinds = set(runs[l1]["collectives"]) | set(runs[l2]["collectives"])
+        coll_extrap = {}
+        for k in coll_kinds:
+            a = runs[l1]["collectives"].get(k, 0)
+            b = runs[l2]["collectives"].get(k, 0)
+            coll_extrap[k] = max(int(a + (b - a) / (l2 - l1) * (L - l1)), 0)
+        extrap = {
+            "flops": lin("flops"), "bytes": lin("bytes"),
+            "collectives": coll_extrap,
+            "collective_bytes": sum(coll_extrap.values()),
+            "anchor_layers": [l1, l2],
+            "anchor_compile_s": [runs[l1]["compile_s"], runs[l2]["compile_s"]],
+        }
+
+    src = extrap if extrap is not None else prod
+    rl = Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=mesh.devices.size,
+        hlo_flops=src["flops"], hlo_bytes=src["bytes"],
+        collective_bytes=src["collective_bytes"], collectives=src["collectives"],
+        model_flops=model_flops(cfg, shape),
+        peak_memory_bytes=prod["temp_bytes"] + prod["arg_bytes"])
+    row = rl.row()
+    row.update({
+        "collectives": rl.collectives,
+        "microbatches": mb, "opts": (list(opts_flags)
+                                      + (["serve_sharding"] if serve_sharding
+                                         else [])
+                                      + (["pad_heads"] if pad_heads else [])),
+        "production": {k: prod[k] for k in
+                       ("flops", "bytes", "collective_bytes", "temp_bytes",
+                        "arg_bytes", "lower_s", "compile_s")},
+        "extrapolated": bool(extrap),
+        "memory_analysis": prod["memory_analysis"],
+    })
+    if extrap:
+        row["cost_anchors"] = {"layers": extrap["anchor_layers"],
+                               "compile_s": extrap["anchor_compile_s"]}
+    if verbose:
+        brief = {k: row[k] for k in ("t_compute_s", "t_memory_s",
+                                     "t_collective_s", "bottleneck",
+                                     "useful_flops_frac", "peak_memory_gib")}
+        print("roofline:", json.dumps(
+            {k: (round(v, 6) if isinstance(v, float) else v)
+             for k, v in brief.items()}, default=str))
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opts", default="",
+                    help="comma list of ForwardOptions bool flags, e.g. "
+                         "triangle_attention,rwkv_chunked")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=0,
+                help="0 = auto per arch")
+    ap.add_argument("--no-cost-extrapolate", action="store_true",
+                    help="production compile only (multi-pod pass)")
+    ap.add_argument("--serve-sharding", action="store_true",
+                    help="inference shapes use the TP-only param policy "
+                         "(no FSDP weight all-gathers); §Perf")
+    ap.add_argument("--pad-heads", action="store_true",
+                    help="pad query groups so KV*G divides the model axis "
+                         "(kills score all-reduces); §Perf")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = ([s.name for s in INPUT_SHAPES] if args.shape == "all"
+              else args.shape.split(","))
+    opts_flags = tuple(f for f in args.opts.split(",") if f)
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for sh in shapes:
+            tag = f"{arch}__{sh}__{'2x16x16' if args.multi_pod else '16x16'}"
+            if opts_flags:
+                tag += "__" + "-".join(opts_flags)
+            if args.microbatches > 1:
+                tag += f"__mb{args.microbatches}"
+            if args.serve_sharding:
+                tag += "__servesh"
+            if args.pad_heads:
+                tag += "__padheads"
+            try:
+                row = dryrun_one(
+                    arch, sh, multi_pod=args.multi_pod,
+                    opts_flags=opts_flags, microbatches=args.microbatches,
+                    cost_extrapolate=not args.no_cost_extrapolate,
+                    serve_sharding=args.serve_sharding,
+                    pad_heads=args.pad_heads)
+                (outdir / f"{tag}.json").write_text(
+                    json.dumps(row, indent=1, default=str))
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((tag, repr(e)))
+                (outdir / f"{tag}.FAILED").write_text(traceback.format_exc())
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("dry-run complete:", len(archs) * len(shapes), "combos")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512"
+                           + " --xla_llvm_disable_expensive_passes=true")
+"""Perf-iteration runner (§Perf): measure one hillclimb change.
+
+Runs dryrun_one twice (baseline args vs changed args) and records the
+hypothesis -> change -> before/after -> verdict JSON consumed by
+repro.roofline.report.
+
+  PYTHONPATH=src python -m repro.launch.perf_iter --pair qwen2.5-32b:prefill_32k \
+      --iteration 1 --title "TP-only serve sharding" \
+      --hypothesis "..." --change-flags serve_sharding [--change-opts ...] \
+      [--base-opts ...] [--change-mb N]
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.dryrun import dryrun_one
+
+KEYS = ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+        "peak_memory_gib", "collective_bytes_per_chip", "useful_flops_frac")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, help="arch:shape")
+    ap.add_argument("--iteration", type=int, required=True)
+    ap.add_argument("--title", required=True)
+    ap.add_argument("--hypothesis", required=True)
+    ap.add_argument("--change", default="", help="prose description")
+    ap.add_argument("--base-opts", default="")
+    ap.add_argument("--base-mb", type=int, default=0)
+    ap.add_argument("--base-serve-sharding", action="store_true")
+    ap.add_argument("--base-pad-heads", action="store_true")
+    ap.add_argument("--change-opts", default="")
+    ap.add_argument("--change-mb", type=int, default=0)
+    ap.add_argument("--change-serve-sharding", action="store_true")
+    ap.add_argument("--change-pad-heads", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    arch, shape = args.pair.split(":")
+
+    def run(opts, mb, serve, pad):
+        flags = tuple(f for f in opts.split(",") if f)
+        row = dryrun_one(arch, shape, opts_flags=flags, microbatches=mb,
+                         serve_sharding=serve, pad_heads=pad, verbose=True)
+        return {k: row.get(k) for k in KEYS}
+
+    before = run(args.base_opts, args.base_mb, args.base_serve_sharding,
+                 args.base_pad_heads)
+    after = run(args.change_opts, args.change_mb, args.change_serve_sharding,
+                args.change_pad_heads)
+
+    dom = before["bottleneck"]
+    key = {"compute": "t_compute_s", "memory": "t_memory_s",
+           "collective": "t_collective_s"}[dom]
+    delta = (after[key] - before[key]) / before[key] * 100 if before[key] else 0
+    verdict = (f"dominant term ({dom}) moved {delta:+.1f}%; "
+               f"bottleneck now {after['bottleneck']}")
+
+    rec = {"pair": args.pair, "iteration": args.iteration,
+           "title": args.title, "hypothesis": args.hypothesis,
+           "change": args.change or args.title,
+           "before": before, "after": after, "verdict": verdict}
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    fname = f"{arch}__{shape}__{args.iteration:02d}.json"
+    (out / fname).write_text(json.dumps(rec, indent=1, default=str))
+    print(json.dumps(rec, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.config import ArchConfig, INPUT_SHAPES, InputShape, get_shape
+from repro.models.model import Model, ce_loss

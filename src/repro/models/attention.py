@@ -1,0 +1,415 @@
+"""Attention: GQA (with RoPE, sliding window, soft-capping) and DeepSeek MLA.
+
+Three execution paths:
+
+* ``plain_attention``   — materialized scores; short sequences / encoders.
+* ``chunked_attention`` — flash-style online softmax over KV chunks with the
+  query axis folded into chunks; bounded memory for 32k prefill. The baseline
+  visits the full (q-chunk × kv-chunk) rectangle; ``triangle=True`` visits
+  only chunk pairs that intersect the causal mask (statically enumerated) —
+  this is the §Perf "causal chunk pruning" optimization.
+* ``decode_attention``  — one query token against a (possibly windowed) cache.
+
+All paths compute softmax statistics in float32 regardless of compute dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Params, PRNGKey, dense_init, split_keys
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_rope, rms_norm, rms_norm_init, softcap
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def _padded_heads(cfg: ArchConfig):
+    """(G_padded, H_padded): query-group padding for TPU-aligned sharding."""
+    kv = cfg.num_kv_heads
+    g = cfg.num_heads // kv
+    gp = max(cfg.attn_group_pad, g) if cfg.attn_group_pad else g
+    return gp, kv * gp
+
+
+def gqa_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    d, kv, hd = cfg.d_model, cfg.num_kv_heads, cfg.resolved_head_dim
+    _, hp = _padded_heads(cfg)
+    ks = split_keys(key, ["wq", "wk", "wv", "wo"])
+    bias = cfg.qkv_bias
+    return {
+        "wq": dense_init(ks["wq"], d, hp * hd, bias=bias),
+        "wk": dense_init(ks["wk"], d, kv * hd, bias=bias),
+        "wv": dense_init(ks["wv"], d, kv * hd, bias=bias),
+        "wo": dense_init(ks["wo"], hp * hd, d, bias=False),
+    }
+
+
+def mla_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_dim = m.nope_head_dim + m.rope_head_dim
+    ks = split_keys(key, ["wq", "wkv_a", "wkv_b", "wo", "q_a", "q_b"])
+    p: Params = {
+        # compress: d_model -> kv_lora (content) + rope_head_dim (shared pos key)
+        "wkv_a": dense_init(ks["wkv_a"], d, m.kv_lora_rank + m.rope_head_dim, bias=False),
+        "kv_norm": rms_norm_init(m.kv_lora_rank),
+        # expand: kv_lora -> per-head (k_nope, v)
+        "wkv_b": dense_init(ks["wkv_b"], m.kv_lora_rank,
+                            h * (m.nope_head_dim + m.v_head_dim), bias=False),
+        "wo": dense_init(ks["wo"], h * m.v_head_dim, d, bias=False),
+    }
+    if m.q_lora_rank:
+        p["wq_a"] = dense_init(ks["q_a"], d, m.q_lora_rank, bias=False)
+        p["q_norm"] = rms_norm_init(m.q_lora_rank)
+        p["wq_b"] = dense_init(ks["q_b"], m.q_lora_rank, h * qk_dim, bias=False)
+    else:
+        p["wq"] = dense_init(ks["wq"], d, h * qk_dim, bias=False)
+    return p
+
+
+def attn_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    return mla_init(key, cfg) if cfg.mla is not None else gqa_init(key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# score-path helpers
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+               window, kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Additive bias (0 / -inf), shape broadcast of q_pos[...,None] vs kv_pos.
+
+    ``window`` may be a python int or a traced int32 scalar (per-layer flag
+    from the scan xs; LARGE_WINDOW means unrestricted).
+    """
+    ok = jnp.ones(q_pos.shape + kv_pos.shape, bool)
+    qp = q_pos[..., :, None]
+    kp = kv_pos[None, :]
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= qp - kp < window
+    if kv_valid is not None:
+        ok &= kv_valid[None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def plain_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window=None,
+                    attn_cap: float = 0.0, q_offset: int = 0) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd). Returns (B,Sq,H,hd_v)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = softcap(s, attn_cap)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(k.shape[1])
+    s = s + _mask_bias(q_pos, kv_pos, causal=causal, window=window)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window=None,
+                      attn_cap: float = 0.0, q_offset: int = 0,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      triangle: bool = False, unroll: bool = False
+                      ) -> jax.Array:
+    """Flash-style chunked attention in pure jnp (memory-bounded prefill)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    KV = k.shape[2]
+    hv = v.shape[-1]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0, (Sq, q_chunk, Skv, kv_chunk)
+    nq, nkv = Sq // q_chunk, Skv // kv_chunk
+    scale = hd ** -0.5
+    qg = (q.reshape(B, nq, q_chunk, KV, G, hd).astype(jnp.float32) * scale)
+
+    q_pos = q_offset + (jnp.arange(nq)[:, None] * q_chunk
+                        + jnp.arange(q_chunk)[None, :])        # (nq, qc)
+
+    def attend(carry, kv_idx):
+        m, l, o = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, kv_idx * kv_chunk, kv_chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, kv_idx * kv_chunk, kv_chunk, 1)
+        s = jnp.einsum("bnqkgd,bskd->bnkgqs", qg, ks.astype(jnp.float32))
+        s = softcap(s, attn_cap)
+        kv_pos = kv_idx * kv_chunk + jnp.arange(kv_chunk)
+        bias = _mask_bias(q_pos.reshape(-1), kv_pos, causal=causal,
+                          window=window).reshape(nq, q_chunk, kv_chunk)
+        s = s + bias[None, :, None, None]                      # (B,nq,KV,G,qc,kvc)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bnkgqs,bskd->bnkgqd", p, vs.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    shape = (B, nq, KV, G, q_chunk)
+    init = (jnp.full(shape, NEG_INF, jnp.float32),
+            jnp.zeros(shape, jnp.float32),
+            jnp.zeros(shape + (hv,), jnp.float32))
+
+    if triangle and causal and isinstance(window, (int, type(None))) and not window:
+        # §Perf: process ONLY chunk pairs (i, j) intersecting the causal
+        # triangle — kv chunk j matters to q chunk i iff
+        # j*kvc <= i*qc + qc - 1 + q_offset. Each q chunk runs its own
+        # online-softmax over its relevant kv prefix; ~2x attention-FLOP
+        # saving for square causal attention. Chunk geometry is static.
+        outs = []
+        for i in range(nq):
+            qi = qg[:, i]                                  # (B,qc,KV,G,hd)
+            mi = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+            li = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+            oi = jnp.zeros((B, KV, G, q_chunk, hv), jnp.float32)
+            q_pos_i = q_offset + i * q_chunk + jnp.arange(q_chunk)
+            for j in range(nkv):
+                if j * kv_chunk > i * q_chunk + q_chunk - 1 + q_offset:
+                    break
+                ks = jax.lax.slice_in_dim(k, j * kv_chunk,
+                                          (j + 1) * kv_chunk, axis=1)
+                vs = jax.lax.slice_in_dim(v, j * kv_chunk,
+                                          (j + 1) * kv_chunk, axis=1)
+                si = jnp.einsum("bqkgd,bskd->bkgqs", qi,
+                                ks.astype(jnp.float32))
+                si = softcap(si, attn_cap)
+                kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+                si = si + _mask_bias(q_pos_i, kv_pos, causal=True,
+                                     window=None)
+                m_new = jnp.maximum(mi, jnp.max(si, axis=-1))
+                pi = jnp.exp(si - m_new[..., None])
+                corr = jnp.exp(mi - m_new)
+                li = li * corr + jnp.sum(pi, axis=-1)
+                oi = oi * corr[..., None] + jnp.einsum(
+                    "bkgqs,bskd->bkgqd", pi, vs.astype(jnp.float32))
+                mi = m_new
+            outs.append(oi / jnp.maximum(li, 1e-30)[..., None])
+        out = jnp.stack(outs, axis=1)                      # (B,nq,KV,G,qc,hv)
+        out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, Sq, H, hv)
+        return out.astype(q.dtype)
+
+    (m, l, o), _ = jax.lax.scan(attend, init, jnp.arange(nkv),
+                                unroll=nkv if unroll else 1)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    # (B,nq,KV,G,qc,hv) -> (B,Sq,H,hv)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, Sq, H, hv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                     cache_len: jax.Array, *, window=None,
+                     attn_cap: float = 0.0) -> jax.Array:
+    """q: (B,1,H,hd) against cache (B,S,KV,hd); cache_len = current position+1."""
+    B, _, H, hd = q.shape
+    S, KV = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k.astype(jnp.float32))
+    s = softcap(s, attn_cap)
+    pos = jnp.arange(S)
+    q_pos = cache_len - 1
+    ok = pos[None, :] < cache_len[..., None] if cache_len.ndim else pos < cache_len
+    ok = jnp.broadcast_to(ok, (B, S)) if ok.ndim == 2 else jnp.broadcast_to(ok[None], (B, S))
+    if window is not None:
+        ok = ok & (q_pos[:, None] - pos[None, :] < window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, cache_v.astype(jnp.float32))
+    return o.reshape(B, 1, H, cache_v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full GQA block forward (projections + rope + attend)
+# ---------------------------------------------------------------------------
+
+def _proj(p: Params, x: jax.Array, heads: int, hd: int) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y.reshape(x.shape[:-1] + (heads, hd))
+
+
+def gqa_forward(params: Params, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array, *, window, mode: str,
+                cache: Optional[Params] = None,
+                kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                causal: bool = True, triangle: bool = False,
+                unroll: bool = False, mesh=None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """Run one GQA attention block.
+
+    mode: "train" (no cache), "prefill" (returns filled cache), "decode"
+    (x is (B,1,D); reads+updates cache). ``kv_override`` supplies external
+    K/V inputs for cross-attention (already projected source states).
+    """
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    gp, h = _padded_heads(cfg)           # h = padded head count
+    g_real = cfg.num_heads // kv
+    q = _proj(params["wq"], x, h, hd)
+    q = apply_rope(q, positions, cfg.rope_theta) if kv_override is None else q
+    if mesh is not None and cfg.attn_group_pad:
+        # force head-sharded q and model-replicated k/v: without this GSPMD
+        # splits head_dim across 'model' and all-reduces the score tensors
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ba = tuple(a for a in mesh.axis_names if a != "model")
+        q = jax.lax.with_sharding_constraint(
+            q, NamedSharding(mesh, P(ba, None, "model", None)))
+
+    if kv_override is not None:
+        k_all, v_all = kv_override
+        y = plain_attention(q, k_all, v_all, causal=False,
+                            attn_cap=cfg.attn_softcap)
+        out = y.reshape(x.shape[:-1] + (h * hd,)) @ params["wo"]["w"].astype(x.dtype)
+        return out, None
+
+    k = _proj(params["wk"], x, kv, hd)
+    v = _proj(params["wv"], x, kv, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if mesh is not None and cfg.attn_group_pad:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ba = tuple(a for a in mesh.axis_names if a != "model")
+        repl = NamedSharding(mesh, P(ba, None, None, None))
+        k = jax.lax.with_sharding_constraint(k, repl)
+        v = jax.lax.with_sharding_constraint(v, repl)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        idx = cache["len"]                                     # scalar int32
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, 1)
+        y = decode_attention(q, ck, cv, jnp.full((x.shape[0],), idx + 1),
+                             window=window, attn_cap=cfg.attn_softcap)
+        new_cache = {"k": ck, "v": cv, "len": idx + 1}
+    else:
+        S = x.shape[1]
+        if S <= 2048:
+            y = plain_attention(q, k, v, causal=causal, window=window,
+                                attn_cap=cfg.attn_softcap)
+        else:
+            y = chunked_attention(q, k, v, causal=causal, window=window,
+                                  attn_cap=cfg.attn_softcap, triangle=triangle,
+                                  unroll=unroll)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v, "len": jnp.int32(S)}
+
+    if gp != g_real:
+        # zero the padded group members so dead heads can't leak through wo
+        gidx = jnp.arange(h) % gp
+        y = y * (gidx < g_real).astype(y.dtype)[None, None, :, None]
+    out = y.reshape(x.shape[:-1] + (h * hd,)) @ params["wo"]["w"].astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA forward (DeepSeek-V2): compressed KV cache
+# ---------------------------------------------------------------------------
+
+def mla_forward(params: Params, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array, *, mode: str,
+                cache: Optional[Params] = None, triangle: bool = False,
+                unroll: bool = False
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    m = cfg.mla
+    h = cfg.num_heads
+    qk_dim = m.nope_head_dim + m.rope_head_dim
+    B = x.shape[0]
+
+    if m.q_lora_rank:
+        qa = x @ params["wq_a"]["w"].astype(x.dtype)
+        qa = rms_norm(params["q_norm"], qa, cfg.rms_eps)
+        q = (qa @ params["wq_b"]["w"].astype(x.dtype)).reshape(
+            x.shape[:-1] + (h, qk_dim))
+    else:
+        q = _proj(params["wq"], x, h, qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"]["w"].astype(x.dtype)            # (B,S,lora+rope)
+    c_kv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(params["kv_norm"], c_kv, cfg.rms_eps)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+
+    def expand(c):
+        """c: (B,S,lora) -> per-head k_nope (B,S,h,nope), v (B,S,h,v_dim)."""
+        kvb = (c @ params["wkv_b"]["w"].astype(c.dtype)).reshape(
+            c.shape[:-1] + (h, m.nope_head_dim + m.v_head_dim))
+        return jnp.split(kvb, [m.nope_head_dim], axis=-1)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        idx = cache["len"]
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx, 1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx, 1)
+        k_nope_all, v_all = expand(cc)                         # (B,S,h,·)
+        k_all = jnp.concatenate(
+            [k_nope_all, jnp.broadcast_to(cr[..., None, :],
+                                          cr.shape[:2] + (h, m.rope_head_dim))],
+            axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        y = decode_attention(qq, k_all, v_all, jnp.full((B,), idx + 1))
+        new_cache = {"c_kv": cc, "k_rope": cr, "len": idx + 1}
+    else:
+        k_nope, v = expand(c_kv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[..., None, :],
+                                      k_rope.shape[:2] + (h, m.rope_head_dim))],
+            axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        S = x.shape[1]
+        if S <= 2048:
+            y = plain_attention(qq, k, v, causal=True)
+        else:
+            y = chunked_attention(qq, k, v, causal=True, triangle=triangle,
+                                  unroll=unroll)
+        if mode == "prefill":
+            new_cache = {"c_kv": c_kv, "k_rope": k_rope, "len": jnp.int32(S)}
+
+    out = y.reshape(x.shape[:-1] + (h * m.v_head_dim,))
+    out = out @ params["wo"]["w"].astype(x.dtype)
+    return out, new_cache
+
+
+def attn_forward(params: Params, cfg: ArchConfig, x, positions, *, window,
+                 mode: str, cache=None, causal: bool = True,
+                 triangle: bool = False, unroll: bool = False, mesh=None):
+    if cfg.mla is not None:
+        return mla_forward(params, cfg, x, positions, mode=mode, cache=cache,
+                           triangle=triangle, unroll=unroll)
+    return gqa_forward(params, cfg, x, positions, window=window, mode=mode,
+                       cache=cache, causal=causal, triangle=triangle,
+                       unroll=unroll, mesh=mesh)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Params:
+    """Per-layer KV cache pytree (stacked over layers by the caller)."""
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+                "len": jnp.int32(0)}
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, max_len, kv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+            "len": jnp.int32(0)}

@@ -1,0 +1,199 @@
+"""Architecture configuration for the model zoo.
+
+One ``ArchConfig`` describes any of the assigned architectures (dense / MoE /
+SSM / hybrid / enc-dec / VLM / audio). Family-specific knobs live in optional
+sub-configs; the paper's technique surfaces as ``ffn_connectivity`` (DenseNet
+FFN option, DESIGN.md §3) and ``aux_head`` (OFENet-style decoupled aux loss).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01      # load-balance loss weight
+    first_dense_layers: int = 0        # deepseek-v2: layer 0 is dense
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0               # 0 = full-rank Q projection
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block parameters."""
+    state_dim: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk_size: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64               # low-rank data-dependent decay (Finch)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2: shared attention block applied every N backbone layers."""
+    attn_every: int = 6
+    concat_embedding: bool = True      # shared block sees [h, initial_emb]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    """Whisper: encoder over (stub) audio-frame embeddings."""
+    encoder_layers: int = 12
+    encoder_seq: int = 1500            # mel frames after conv stub
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Stub modality frontend: input_specs() supplies precomputed embeddings."""
+    kind: str = "none"                 # none | audio | vision
+    num_embeddings: int = 0            # frames or patches prepended/consumed
+    embed_dim: int = 0                 # raw embedding dim before projector
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                        # dense | moe | ssm | hybrid | encdec | vlm
+    source: str                        # citation bracket from the assignment
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None     # default d_model // num_heads
+    qkv_bias: bool = False             # qwen2.5
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+    # gemma2-isms
+    logit_softcap: float = 0.0
+    attn_softcap: float = 0.0
+    sliding_window: int = 0            # 0 = full attention
+    local_global_period: int = 0       # gemma2: alternate local/global every 2
+    post_norms: bool = False           # gemma2 post-attn/post-ffn norms
+    # TPU layout: pad each KV head's query group to this size so that
+    # KV*attn_group_pad divides the model axis — avoids GSPMD splitting
+    # head_dim and all-reducing attention scores (§Perf). 0 = native groups.
+    attn_group_pad: int = 0
+    # paper technique (DESIGN.md §3)
+    ffn_connectivity: str = "glu"      # glu | mlp | densenet | d2rl | resnet
+    ffn_sublayers: int = 2             # for densenet/d2rl/mlp connectivity
+    aux_head: bool = False             # OFENet-style next-embedding aux loss
+    # family sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    frontend: FrontendConfig = dataclasses.field(default_factory=FrontendConfig)
+    # numerics / training
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm" and self.rwkv is not None or self.family == "ssm"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """Sub-quadratic decode path exists (DESIGN.md §3 shape coverage)."""
+        return (self.family in ("ssm", "hybrid")
+                or self.sliding_window > 0)
+
+    def reduced(self, *, num_layers: int = 2, d_model: int = 256,
+                vocab_size: int = 512, max_experts: int = 4) -> "ArchConfig":
+        """CPU-runnable variant of the same family, for smoke tests."""
+        heads = max(1, min(self.num_heads, 4))
+        kv = max(1, min(self.num_kv_heads, heads))
+        hd = min(self.resolved_head_dim, 64)
+        changes = dict(
+            num_layers=num_layers, d_model=d_model, num_heads=heads,
+            num_kv_heads=kv, head_dim=hd, d_ff=min(self.d_ff, 2 * d_model),
+            vocab_size=vocab_size, compute_dtype="float32", remat=False,
+        )
+        if self.moe:
+            changes["moe"] = dataclasses.replace(
+                self.moe, num_experts=min(self.moe.num_experts, max_experts),
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=min(self.moe.d_ff_expert, d_model),
+                d_ff_shared=min(self.moe.d_ff_shared, d_model) if self.moe.d_ff_shared else 0,
+                first_dense_layers=min(self.moe.first_dense_layers, 1))
+        if self.mla:
+            changes["mla"] = dataclasses.replace(
+                self.mla, kv_lora_rank=64, q_lora_rank=0,
+                rope_head_dim=32, nope_head_dim=32, v_head_dim=32)
+            changes["head_dim"] = None
+        if self.ssm:
+            changes["ssm"] = dataclasses.replace(
+                self.ssm, state_dim=16, head_dim=32, chunk_size=16)
+        if self.rwkv:
+            changes["rwkv"] = dataclasses.replace(self.rwkv, head_dim=32, decay_lora=8)
+        if self.hybrid:
+            changes["hybrid"] = dataclasses.replace(self.hybrid, attn_every=1)
+        if self.encdec:
+            changes["encdec"] = dataclasses.replace(
+                self.encdec, encoder_layers=num_layers, encoder_seq=16)
+        if self.frontend.kind != "none":
+            changes["frontend"] = dataclasses.replace(
+                self.frontend, num_embeddings=8, embed_dim=64)
+        if self.local_global_period:
+            changes["sliding_window"] = 32
+        if self.sliding_window and not self.local_global_period:
+            changes["sliding_window"] = 32
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                          # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.mode == "decode"
+
+
+INPUT_SHAPES: Tuple[InputShape, ...] = (
+    InputShape("train_4k", 4096, 256, "train"),
+    InputShape("prefill_32k", 32768, 32, "prefill"),
+    InputShape("decode_32k", 32768, 128, "decode"),
+    InputShape("long_500k", 524288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> InputShape:
+    for s in INPUT_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown input shape {name!r}")

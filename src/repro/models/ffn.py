@@ -1,0 +1,212 @@
+"""Feed-forward layers: gated (GLU) FFN, paper-connectivity FFN stacks, and
+the expert-parallel MoE layer.
+
+The MoE layer is a ``shard_map`` over the full mesh (DESIGN.md §5):
+experts are sharded over the ``model`` axis (expert parallelism), and each
+expert's weight matrices are additionally FSDP-sharded over (``data``,
+[``pod``]) on the d_model dimension — they are all-gathered per layer inside
+the block (ZeRO-3 semantics), which is what makes deepseek-v2-236b fit.
+Tokens stay local to their (pod, data) shard; each model shard routes the
+local tokens, keeps the ones destined for its experts (capacity-bounded),
+computes, and the partial outputs are ``psum``-combined over ``model``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common import (Params, PRNGKey, dense_init, get_activation,
+                          split_keys, swish)
+from repro.core.blocks import MLPBlockConfig, mlp_block_apply, mlp_block_init
+from repro.models.config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# dense FFN variants
+# ---------------------------------------------------------------------------
+
+def glu_ffn_init(key: PRNGKey, d_model: int, d_ff: int) -> Params:
+    ks = split_keys(key, ["gate", "up", "down"])
+    return {"gate": dense_init(ks["gate"], d_model, d_ff, bias=False),
+            "up": dense_init(ks["up"], d_model, d_ff, bias=False),
+            "down": dense_init(ks["down"], d_ff, d_model, bias=False)}
+
+
+def glu_ffn(p: Params, x: jax.Array, activation: str = "silu") -> jax.Array:
+    act = get_activation(activation)
+    g = act(x @ p["gate"]["w"].astype(x.dtype))
+    u = x @ p["up"]["w"].astype(x.dtype)
+    return (g * u) @ p["down"]["w"].astype(x.dtype)
+
+
+def mlp_ffn_init(key: PRNGKey, d_model: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"fc1": dense_init(k1, d_model, d_ff),
+            "fc2": dense_init(k2, d_ff, d_model)}
+
+
+def mlp_ffn(p: Params, x: jax.Array, activation: str = "gelu") -> jax.Array:
+    act = get_activation(activation)
+    h = act(x @ p["fc1"]["w"].astype(x.dtype) + p["fc1"]["b"].astype(x.dtype))
+    return h @ p["fc2"]["w"].astype(x.dtype) + p["fc2"]["b"].astype(x.dtype)
+
+
+def connectivity_ffn_cfg(cfg: ArchConfig) -> MLPBlockConfig:
+    """Paper-technique FFN: an MLP block with selectable connectivity
+    (densenet / d2rl / resnet / mlp) replacing the GLU FFN (DESIGN.md §3)."""
+    return MLPBlockConfig(
+        in_dim=cfg.d_model, num_layers=cfg.ffn_sublayers,
+        num_units=cfg.d_ff, connectivity=cfg.ffn_connectivity,
+        activation="swish", batch_norm=False, out_dim=cfg.d_model)
+
+
+def ffn_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    if cfg.ffn_connectivity == "glu":
+        return glu_ffn_init(key, cfg.d_model, cfg.d_ff)
+    if cfg.ffn_connectivity == "mlp2":
+        return mlp_ffn_init(key, cfg.d_model, cfg.d_ff)
+    return mlp_block_init(key, connectivity_ffn_cfg(cfg))
+
+
+def ffn_forward(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.ffn_connectivity == "glu":
+        return glu_ffn(p, x)
+    if cfg.ffn_connectivity == "mlp2":
+        return mlp_ffn(p, x)
+    out, _, _ = mlp_block_apply(p, connectivity_ffn_cfg(cfg), x, train=False)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.num_experts, m.d_ff_expert
+    ks = split_keys(key, ["router", "gate", "up", "down", "shared"])
+    scale = d ** -0.5
+    p: Params = {
+        "router": {"w": jax.random.normal(ks["router"], (d, e)) * scale},
+        "gate": {"w": jax.random.normal(ks["gate"], (e, d, f)) * scale},
+        "up": {"w": jax.random.normal(ks["up"], (e, d, f)) * scale},
+        "down": {"w": jax.random.normal(ks["down"], (e, f, d)) * (f ** -0.5)},
+    }
+    if m.num_shared_experts:
+        p["shared"] = glu_ffn_init(ks["shared"], d,
+                                   m.d_ff_shared or m.d_ff_expert * m.num_shared_experts)
+    return p
+
+
+def _moe_local(xt: jax.Array, router_w: jax.Array, wg: jax.Array, wu: jax.Array,
+               wd: jax.Array, *, top_k: int, num_experts: int,
+               expert_offset, capacity: int) -> Tuple[jax.Array, jax.Array]:
+    """Token-choice top-k routing against the local expert slice.
+
+    xt: (T, D) local tokens; wg/wu/wd: (E_loc, D, F)/(E_loc, F, D) local
+    experts whose global ids are [expert_offset, expert_offset + E_loc).
+    Returns (partial output (T, D) — zero rows for tokens not routed here —
+    and the load-balance aux loss numerator computed over ALL experts).
+    """
+    T, D = xt.shape
+    e_loc = wg.shape[0]
+    logits = (xt.astype(jnp.float32) @ router_w.astype(jnp.float32))   # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, top_k)                       # (T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance (Switch-style): mean prob per expert * mean assignment rate
+    assign = jnp.zeros((num_experts,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    lb = num_experts * jnp.sum(jnp.mean(probs, 0) * assign / (T * top_k))
+
+    flat_e = idx.reshape(-1)                                           # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), top_k)
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(se.shape[0]) - first                              # rank in expert
+    local = (se >= expert_offset) & (se < expert_offset + e_loc) & (pos < capacity)
+    slot = jnp.where(local, (se - expert_offset) * capacity + pos, e_loc * capacity)
+
+    # gather tokens into (E_loc*capacity, D) buffer (last row = trash)
+    buf = jnp.zeros((e_loc * capacity + 1, D), xt.dtype).at[slot].set(
+        jnp.where(local[:, None], xt[st], 0))
+    h = buf[:-1].reshape(e_loc, capacity, D)
+    y = jnp.einsum("ecd,edf->ecf", h, wg.astype(h.dtype))
+    y = swish(y) * jnp.einsum("ecd,edf->ecf", h, wu.astype(h.dtype))
+    y = jnp.einsum("ecf,efd->ecd", y, wd.astype(h.dtype))
+    y = y.reshape(e_loc * capacity, D)
+
+    out = jnp.zeros((T, D), xt.dtype).at[jnp.where(local, st, T)].add(
+        jnp.where(local[:, None], y[jnp.minimum(slot, e_loc * capacity - 1)]
+                  * sg[:, None].astype(xt.dtype), 0),
+        mode="drop")
+    return out, lb
+
+
+def moe_forward(p: Params, cfg: ArchConfig, x: jax.Array, *,
+                mesh: Optional[jax.sharding.Mesh] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y, load_balance_loss). Distributed iff ``mesh`` is given."""
+    m = cfg.moe
+    B, S, D = x.shape
+
+    if mesh is None:
+        # single-device path (smoke tests / RL-scale)
+        xt = x.reshape(-1, D)
+        cap = max(4, int(xt.shape[0] * m.top_k * m.capacity_factor
+                         // m.num_experts))
+        out, lb = _moe_local(xt, p["router"]["w"], p["gate"]["w"], p["up"]["w"],
+                             p["down"]["w"], top_k=m.top_k,
+                             num_experts=m.num_experts, expert_offset=0,
+                             capacity=cap)
+        y = out.reshape(B, S, D)
+    else:
+        axes = mesh.axis_names                       # ("data","model") or ("pod","data","model")
+        batch_axes = tuple(a for a in axes if a != "model")
+        fsdp = batch_axes                             # d_model FSDP axes for experts
+        n_model = mesh.shape["model"]
+        n_batch = 1
+        for a in batch_axes:
+            n_batch *= mesh.shape[a]
+        t_local = (B // n_batch) * S
+        e_loc = m.num_experts // n_model
+        cap = max(4, int(t_local * m.top_k * m.capacity_factor // m.num_experts))
+
+        def body(xb, rw, wg, wu, wd):
+            # xb: (B_loc, S, D); wg/wu/wd: (E_loc, D/fsdp, F) — gather FSDP
+            # shards. §Perf: cast to the compute dtype BEFORE the all-gather —
+            # gathering fp32 masters doubles both wire bytes and the transient
+            # VMEM/HBM footprint for zero numeric benefit (compute is bf16).
+            cd = xb.dtype
+            wg_f = jax.lax.all_gather(wg.astype(cd), fsdp, axis=1, tiled=True)
+            wu_f = jax.lax.all_gather(wu.astype(cd), fsdp, axis=1, tiled=True)
+            wd_f = jax.lax.all_gather(wd.astype(cd), fsdp, axis=2, tiled=True)
+            off = jax.lax.axis_index("model") * e_loc
+            out, lb = _moe_local(xb.reshape(-1, D), rw, wg_f, wu_f, wd_f,
+                                 top_k=m.top_k, num_experts=m.num_experts,
+                                 expert_offset=off, capacity=cap)
+            out = jax.lax.psum(out, "model")
+            # lb is computed from the full (replicated-over-model) router
+            # view, so it is identical on every model shard: pmean everywhere
+            lb = jax.lax.pmean(lb, axes)
+            return out.reshape(xb.shape), lb
+
+        y, lb = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(batch_axes, None, None), P(),
+                      P("model", fsdp, None), P("model", fsdp, None),
+                      P("model", None, fsdp)),
+            out_specs=(P(batch_axes, None, None), P()),
+            check_vma=False,
+        )(x, p["router"]["w"], p["gate"]["w"], p["up"]["w"], p["down"]["w"])
+
+    if m.num_shared_experts:
+        y = y + glu_ffn(p["shared"], x)
+    return y, lb

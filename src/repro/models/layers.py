@@ -1,0 +1,90 @@
+"""Basic transformer layers: norms, RoPE, embeddings, softcap."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Params, PRNGKey
+
+
+def rms_norm_init(dim: int) -> Params:
+    return {"scale": jnp.zeros((dim,))}          # gemma-style (1 + scale)
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm_init(dim: int) -> Params:
+    return {"scale": jnp.ones((dim,)), "bias": jnp.zeros((dim,))}
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap) if cap else x
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                    # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..,S,1,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings, (seq, dim)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * idx / max(dim // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key: PRNGKey, vocab: int, dim: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, dim), dtype) * (dim ** -0.5)}
+
+
+def embed(p: Params, tokens: jax.Array, compute_dtype, scale: bool = False
+          ) -> jax.Array:
+    table = p["table"].astype(compute_dtype)
+    x = jnp.take(table, tokens, axis=0)
+    if scale:                                  # gemma multiplies by sqrt(d)
+        x = x * jnp.asarray(x.shape[-1] ** 0.5, compute_dtype)
+    return x
+
+
+def unembed(p: Params, x: jax.Array, compute_dtype) -> jax.Array:
+    """Logits via (tied or untied) table: (..., d) @ (d, vocab)."""
+    return x @ p["table"].astype(compute_dtype).T

@@ -1,0 +1,230 @@
+"""Unified model API: loss/train/prefill/decode + input_specs for any arch.
+
+``Model`` wraps an ``ArchConfig`` and exposes:
+
+* ``init(key)``                          — parameter pytree
+* ``loss(params, batch, opts)``          — CE (+ MoE load-balance + aux head)
+* ``train_step(state, batch, opts)``     — AdamW step, returns (state, metrics)
+* ``prefill(params, batch, opts)``       — fill caches, return last logits
+* ``decode_step(params, caches, batch)`` — one token, updated caches
+* ``input_specs(shape)``                 — ShapeDtypeStruct stand-ins for the
+  dry-run (no allocation), including cache specs for decode shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Params, PRNGKey
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.config import ArchConfig, InputShape
+from repro.models.layers import softcap
+from repro.optim import AdamWConfig, adamw_init, adamw_update, global_norm
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array,
+            mask: Optional[jax.Array] = None) -> jax.Array:
+    """Cross-entropy without gathering across a (possibly sharded) vocab dim."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    optim: AdamWConfig = dataclasses.field(
+        default_factory=lambda: AdamWConfig(lr=3e-4, weight_decay=0.1,
+                                            grad_clip_norm=1.0))
+
+    # ----------------------------------------------------------------- init
+    def init(self, key: PRNGKey) -> Params:
+        if self.cfg.family == "encdec":
+            return encdec_mod.init_params(key, self.cfg)
+        return tf_mod.init_params(key, self.cfg)
+
+    def init_state(self, key: PRNGKey) -> Params:
+        params = self.init(key)
+        return {"params": params, "opt": adamw_init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params: Params, batch: Dict[str, jax.Array],
+             opts: tf_mod.ForwardOptions = tf_mod.ForwardOptions()
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        tokens = batch["tokens"]                       # (B, S+1)
+        inputs = {**batch, "tokens": tokens[:, :-1]}
+        labels = tokens[:, 1:]
+
+        if cfg.family == "encdec":
+            enc = encdec_mod.encode(params, cfg,
+                                    batch["frames"].astype(cfg.compute_dtype))
+            h, _ = encdec_mod.decode_stack(params, cfg, inputs["tokens"], enc,
+                                           mode="train")
+            lb = jnp.float32(0.0)
+        else:
+            h, _, lb = tf_mod.forward(params, cfg, inputs, mode="train",
+                                      opts=opts)
+
+        mask = None
+        if cfg.frontend.kind == "vision" and "patch_embeddings" in batch:
+            # loss only over text positions (h includes prepended patches)
+            n_img = batch["patch_embeddings"].shape[1]
+            h = h[:, n_img:]
+        if cfg.family == "encdec":
+            from repro.models.layers import unembed
+            logits = unembed(params["embed"], h, h.dtype)
+            logits = logits.astype(jnp.float32)
+        else:
+            logits = tf_mod.logits_from_hidden(params, cfg, h)
+        loss = ce_loss(logits, labels, mask)
+        total = loss
+        metrics = {"ce": loss}
+        if cfg.moe is not None:
+            total = total + cfg.moe.router_aux_coef * lb
+            metrics["lb"] = lb
+        if cfg.aux_head and cfg.family not in ("encdec",):
+            # OFENet-style decoupled aux loss: predict next-token embedding
+            from repro.models.layers import embed as embed_fn
+            tgt = jax.lax.stop_gradient(
+                embed_fn(params["embed"], labels, h.dtype))
+            pred = h @ params["aux_head"]["w"].astype(h.dtype)
+            aux = jnp.mean(jnp.square((pred - tgt).astype(jnp.float32)))
+            total = total + 0.1 * aux
+            metrics["aux"] = aux
+        metrics["loss"] = total
+        return total, metrics
+
+    # ----------------------------------------------------------- train step
+    def train_step(self, state: Params, batch: Dict[str, jax.Array],
+                   opts: tf_mod.ForwardOptions = tf_mod.ForwardOptions(),
+                   microbatches: int = 1
+                   ) -> Tuple[Params, Dict[str, jax.Array]]:
+        """One optimizer step; ``microbatches > 1`` accumulates gradients over
+        sequential microbatches (activation memory / n at the same math)."""
+        grad_fn = jax.value_and_grad(
+            lambda p, b: self.loss(p, b, opts), has_aux=True)
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state["params"], batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def acc(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = grad_fn(state["params"], mb)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                m_acc = jax.tree_util.tree_map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            zeros_g = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), state["params"])
+            m0 = jax.eval_shape(
+                lambda p, b: grad_fn(p, b)[0][1], state["params"],
+                jax.tree_util.tree_map(lambda x: x[0], mbs))
+            zeros_m = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, metrics), _ = jax.lax.scan(acc, (zeros_g, zeros_m), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / microbatches,
+                                             metrics)
+        new_params, new_opt = adamw_update(self.optim, grads, state["opt"],
+                                           state["params"])
+        metrics["grad_norm"] = global_norm(grads)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    # -------------------------------------------------------------- serving
+    def prefill(self, params: Params, batch: Dict[str, jax.Array],
+                opts: tf_mod.ForwardOptions = tf_mod.ForwardOptions()
+                ) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc = encdec_mod.encode(params, cfg,
+                                    batch["frames"].astype(cfg.compute_dtype))
+            h, caches = encdec_mod.decode_stack(
+                params, cfg, batch["tokens"], enc, mode="prefill")
+            from repro.models.layers import unembed
+            logits = unembed(params["embed"], h[:, -1], h.dtype)
+            return logits.astype(jnp.float32), caches
+        h, caches, _ = tf_mod.forward(params, cfg, batch, mode="prefill",
+                                      opts=opts)
+        logits = tf_mod.logits_from_hidden(params, cfg, h[:, -1:])[:, 0]
+        return logits, caches
+
+    def decode_step(self, params: Params, caches: Params,
+                    batch: Dict[str, jax.Array],
+                    opts: tf_mod.ForwardOptions = tf_mod.ForwardOptions()
+                    ) -> Tuple[jax.Array, Params]:
+        """One-token decode. batch: {"tokens": (B,1), "position": scalar,
+        ["enc"]: encoder states for encdec}."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            h, new_caches = encdec_mod.decode_stack(
+                params, cfg, batch["tokens"], batch["enc"], mode="decode",
+                caches=caches, position=batch["position"])
+            from repro.models.layers import unembed
+            logits = unembed(params["embed"], h[:, 0], h.dtype)
+            return logits.astype(jnp.float32), new_caches
+        h, new_caches, _ = tf_mod.forward(params, cfg, batch, mode="decode",
+                                          caches=caches, opts=opts)
+        logits = tf_mod.logits_from_hidden(params, cfg, h)[:, 0]
+        return logits, new_caches
+
+    def init_caches(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.compute_dtype)
+        if cfg.family == "encdec":
+            return encdec_mod.init_caches(cfg, batch, max_len, dtype)
+        return tf_mod.init_caches(cfg, batch, max_len, dtype)
+
+    # ----------------------------------------------------------- input specs
+    def input_specs(self, shape: InputShape) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        f = jnp.dtype(cfg.compute_dtype)
+        sds = jax.ShapeDtypeStruct
+
+        def with_frontend(d: Dict[str, Any], seq_for_tokens: int,
+                          plus_one: bool) -> Dict[str, Any]:
+            n = seq_for_tokens + (1 if plus_one else 0)
+            if cfg.family == "encdec":
+                d["frames"] = sds((B, cfg.encdec.encoder_seq, cfg.d_model), f)
+                d["tokens"] = sds((B, n), i32)
+            elif cfg.frontend.kind == "vision":
+                npatch = cfg.frontend.num_embeddings
+                d["patch_embeddings"] = sds((B, npatch, cfg.frontend.embed_dim), f)
+                d["tokens"] = sds((B, max(n - npatch, 1)), i32)
+            else:
+                d["tokens"] = sds((B, n), i32)
+            return d
+
+        if shape.mode == "train":
+            return with_frontend({}, S, True)
+        if shape.mode == "prefill":
+            return with_frontend({}, S, False)
+        # decode: one token against a seq_len cache
+        d: Dict[str, Any] = {"tokens": sds((B, 1), i32),
+                             "position": sds((), i32)}
+        if cfg.family == "encdec":
+            d["enc"] = sds((B, cfg.encdec.encoder_seq, cfg.d_model), f)
+        return d
+
+    def cache_specs(self, shape: InputShape) -> Params:
+        return jax.eval_shape(
+            lambda: self.init_caches(shape.global_batch, shape.seq_len))

@@ -1,0 +1,210 @@
+"""Sharding policy: parameter/cache/batch PartitionSpecs for a mesh.
+
+Policy (DESIGN.md §5): tensor parallelism over ``model`` on the "many heads /
+wide ffn / vocab" dimension of each weight; FSDP (ZeRO-3) over ``data``
+(+``pod``) on the other large dimension. Dims that don't divide evenly by the
+assigned axes fall back to replication (``_prune``) rather than erroring —
+e.g. gemma2's 4 KV heads can't split 16 ways, so the cache shards over the
+head_dim instead.
+
+Rules match on the parameter's path string (joined key names), so they apply
+equally to single and scan-stacked (leading L dim) parameters.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisSpec = Any  # str | tuple[str, ...] | None
+
+
+def _axes_size(mesh: Mesh, axes: AxisSpec) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _prune(mesh: Mesh, shape: Tuple[int, ...], spec: Tuple[AxisSpec, ...]
+           ) -> P:
+    """Drop axes that don't divide the dim; shrink tuple-axes if a prefix fits."""
+    out = []
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            out.append(None)
+            continue
+        cand = axes if isinstance(axes, tuple) else (axes,)
+        # try longest prefix of the axis tuple that divides the dim
+        chosen: Optional[Tuple[str, ...]] = None
+        for k in range(len(cand), 0, -1):
+            if dim % _axes_size(mesh, cand[:k]) == 0:
+                chosen = cand[:k]
+                break
+        if chosen is None:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(chosen)
+    return P(*out)
+
+
+# rule table: (path regex, lambda(ndim-agnostic trailing spec)) — trailing spec
+# applies to the LAST n dims; any leading (stack) dims are None.
+# fsdp = the data(+pod) axis group, tp = "model".
+def _rules(fsdp: AxisSpec):
+    tp = "model"
+    return [
+        # embeddings / unembeddings: vocab on tp, d_model on fsdp
+        (r"embed/table$", (tp, fsdp)),
+        (r"unembed/w$", (fsdp, tp)),
+        (r"dec_pos$", (None, fsdp)),
+        # attention
+        (r"(wq|wk|wv|wq_b|wkv_b)/w$", (fsdp, tp)),
+        (r"(wq_a|wkv_a)/w$", (fsdp, tp)),
+        (r"wo/w$", (tp, fsdp)),
+        (r"(wq|wk|wv)/b$", (tp,)),
+        # moe experts FIRST (the generic ffn rules would shadow them):
+        # E on tp, d_model on fsdp (gathered inside shard_map)
+        (r"moe/(gate|up)/w$", (tp, fsdp, None)),
+        (r"moe/down/w$", (tp, None, fsdp)),
+        (r"moe/router/w$", (None, None)),
+        # dense / glu ffn
+        (r"(gate|up|fc1|wk)/w$", (fsdp, tp)),
+        (r"(down|fc2|wv)/w$", (tp, fsdp)),
+        (r"(fc1|wk)/b$", (tp,)),
+        # rwkv time-mix square weights
+        (r"tm/(wr|wk|wv|wg)/w$", (fsdp, tp)),
+        (r"tm/wo/w$", (tp, fsdp)),
+        (r"w_lora_a/w$", (fsdp, None)),
+        (r"w_lora_b/w$", (None, fsdp)),
+        # ssm
+        (r"(in_proj|out_proj)/w$", (fsdp, tp)),
+        (r"conv/w$", (None, tp)),
+        (r"conv/b$", (tp,)),
+        # projector (vlm)
+        (r"projector/fc1/w$", (None, tp)),
+        (r"projector/fc2/w$", (tp, fsdp)),
+        # mlp-densenet connectivity blocks (paper FFN option): dense layers
+        (r"layers/\d+/dense/w$", (fsdp, tp)),
+        (r"ffn/out/w$", (tp, fsdp)),
+    ]
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def param_specs(params: Any, mesh: Mesh, *, serve: bool = False) -> Any:
+    """PartitionSpec pytree for a parameter pytree (shapes or arrays).
+
+    ``serve=True`` switches to the inference policy: TP over ``model`` only,
+    weights replicated over the data axes. ZeRO-3/FSDP amortizes its per-layer
+    weight all-gathers over the optimizer's memory savings — at inference
+    there is no optimizer state, so FSDP only adds collective traffic
+    (§Perf hillclimb: qwen2.5-32b prefill went collective-bound because of
+    it). Exception: MoE expert weights stay FSDP-sharded even in serve mode
+    (deepseek's 226B expert params don't fit replicated).
+    """
+    fsdp = batch_axes(mesh)
+    rules = _rules(fsdp)
+    fsdp_set = set(fsdp)
+
+    def strip_fsdp(axes: AxisSpec) -> AxisSpec:
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            return None if axes in fsdp_set else axes
+        kept = tuple(a for a in axes if a not in fsdp_set)
+        return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+    def one(path, leaf) -> P:
+        keys = []
+        for pk in path:
+            if hasattr(pk, "key"):
+                keys.append(str(pk.key))
+            elif hasattr(pk, "idx"):
+                keys.append(str(pk.idx))
+            else:
+                keys.append(str(pk))
+        pstr = "/".join(keys)
+        shape = tuple(leaf.shape)
+        keep_fsdp = not serve or re.search(r"moe/(gate|up|down)/w$", pstr)
+        for pat, trailing in rules:
+            if re.search(pat, pstr):
+                n = len(trailing)
+                if len(shape) < n:
+                    break
+                full = (None,) * (len(shape) - n) + tuple(trailing)
+                if not keep_fsdp:
+                    full = tuple(strip_fsdp(a) for a in full)
+                return _prune(mesh, shape, full)
+        # default: replicate small tensors; FSDP the last dim of big vectors
+        if len(shape) >= 2 and int(np.prod(shape)) >= 1 << 20 and keep_fsdp:
+            full = (None,) * (len(shape) - 1) + (fsdp,)
+            return _prune(mesh, shape, full)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def cache_specs(caches: Any, mesh: Mesh) -> Any:
+    """KV/SSM cache specs: batch over data axes; heads/features over model.
+
+    The sequence dim is never sharded (decode writes at a traced position).
+    Path-based rules, all with a stacked leading L dim then batch:
+      k/v        (L,B,S,kv,hd) -> kv heads on model, else head_dim
+      c_kv       (L,B,S,lora)  -> lora on model          (MLA compressed)
+      k_rope     (L,B,S,rope)  -> replicated tail (tiny)
+      ssm state  (L,B,H,P,N)   -> heads on model
+      ssm conv   (L,B,W,C)     -> channels on model
+      rwkv state (L,B,H,k,v)   -> heads on model
+      tm_x/cm_x  (L,B,D)       -> features on model
+      len        scalar        -> replicated
+    """
+    fsdp = batch_axes(mesh)
+
+    def one(path, leaf) -> P:
+        keys = "/".join(str(getattr(pk, "key", getattr(pk, "idx", pk)))
+                        for pk in path)
+        shape = tuple(leaf.shape)
+        if keys.endswith("len") or len(shape) < 3:
+            return P()
+        spec = [None] * len(shape)
+        spec[1] = fsdp
+        if keys.endswith("/k") or keys.endswith("/v"):
+            if shape[-2] % mesh.shape["model"] == 0:
+                spec[-2] = "model"
+            else:
+                spec[-1] = "model"
+        elif keys.endswith("c_kv") or keys.endswith("conv") \
+                or keys.endswith("tm_x") or keys.endswith("cm_x"):
+            spec[-1] = "model"
+        elif keys.endswith("state"):
+            spec[2] = "model"                      # heads
+        return _prune(mesh, shape, tuple(spec))
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def shardings_for(tree: Any, specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda _, s: NamedSharding(mesh, s), tree, specs)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    fsdp = batch_axes(mesh)
+
+    def one(leaf) -> P:
+        if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] % _axes_size(mesh, fsdp) == 0:
+            return P(fsdp)
+        return P()
+    return jax.tree_util.tree_map(one, batch)

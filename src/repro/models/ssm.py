@@ -1,0 +1,193 @@
+"""Mamba2 (SSD) block — used by zamba2-1.2b's backbone.
+
+Structure follows Dao & Gu 2024 (state-space duality):
+  in_proj -> [z (gate) | x | B | C | dt] ; causal depthwise conv on [x|B|C];
+  per-head scalar decay a_t = exp(-softplus(dt_t) * A_h); state recurrence
+      S_t = a_t S_{t-1} + dt_t * B_t x_t^T ,   y_t = C_t^T S_t + D_h x_t
+computed chunkwise (intra-chunk dual "attention" form + inter-chunk scan over
+carried states) — TPU-friendly: all intra-chunk work is MXU einsums, the
+sequential dependency is only over n_chunks (DESIGN.md §2 hardware adaptation).
+
+Decode keeps (conv window, SSM state) in the cache and is O(1) per token —
+this is what makes zamba2 eligible for the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Params, PRNGKey, dense_init, split_keys, swish
+from repro.models.config import ArchConfig
+from repro.models.layers import rms_norm, rms_norm_init
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.state_dim          # x | B | C (single group)
+    return d_inner, n_heads, conv_ch
+
+
+def ssm_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    ks = split_keys(key, ["in", "out", "conv", "A", "dt"])
+    in_dim = 2 * d_inner + 2 * s.state_dim + n_heads
+    return {
+        "in_proj": dense_init(ks["in"], cfg.d_model, in_dim, bias=False),
+        "conv": {"w": jax.random.normal(ks["conv"], (s.conv_width, conv_ch))
+                 * (s.conv_width ** -0.5),
+                 "b": jnp.zeros((conv_ch,))},
+        "log_a": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),   # A_h init in [1,16]
+        "dt_bias": jnp.zeros((n_heads,)),
+        "d_skip": jnp.ones((n_heads,)),
+        "norm": rms_norm_init(d_inner),
+        "out_proj": dense_init(ks["out"], d_inner, cfg.d_model, bias=False),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    s = cfg.ssm
+    d_inner, n_heads, _ = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * s.state_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _conv_train(p: Params, xbc: jax.Array, width: int) -> jax.Array:
+    """Causal depthwise conv over (B,S,C)."""
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * p["conv"]["w"][i]
+              for i in range(width))
+    return swish(out + p["conv"]["b"].astype(out.dtype))
+
+
+def ssd_chunked(x: jax.Array, b: jax.Array, c: jax.Array, dt: jax.Array,
+                log_a: jax.Array, *, chunk: int,
+                init_state: Optional[jax.Array] = None, unroll: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) head inputs; b,c: (B,S,N) (shared across heads, 1 group);
+    dt: (B,S,H) positive step sizes; log_a: (H,) positive decay rates.
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    B, S, H, Pd = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    a = jnp.exp(log_a.astype(jnp.float32))                    # (H,)
+    dt = dt.astype(jnp.float32)
+    # per-step log decay  log g_t = -dt_t * a_h   (<= 0)
+    lg = (-dt * a).reshape(B, nc, chunk, H)
+    xs = x.reshape(B, nc, chunk, H, Pd)
+    bs = b.reshape(B, nc, chunk, N).astype(jnp.float32)
+    cs = c.reshape(B, nc, chunk, N).astype(jnp.float32)
+    dts = dt.reshape(B, nc, chunk, H)
+
+    cum = jnp.cumsum(lg, axis=2)                              # (B,nc,Q,H)
+    total = cum[:, :, -1:, :]                                 # chunk decay
+
+    # intra-chunk (dual form): M[t,s] = exp(cum_t - cum_s) * dt_s * (c_t . b_s)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: grad of where(mask, exp(x), 0) is NaN where exp
+    # overflows; exp(-inf)=0 has a clean zero gradient.
+    rel = jnp.where(tri[None, None, :, :, None], rel, -jnp.inf)
+    gmat = jnp.exp(rel)
+    scores = jnp.einsum("bntk,bnsk->bnts", cs, bs)            # (B,nc,Q,Q)
+    m = scores[..., None] * gmat * dts[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp",
+                         m, xs.astype(jnp.float32))
+
+    # chunk-input states: state contribution of each chunk
+    # state_n = sum_s exp(total - cum_s) dt_s b_s x_s^T
+    w = jnp.exp(total - cum) * dts                            # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bnsh,bnsk,bnshp->bnhpk",
+                             w, bs, xs.astype(jnp.float32))   # (B,nc,H,P,N)
+
+    # inter-chunk: scan carried state across chunks
+    decay_chunk = jnp.exp(total[:, :, 0, :])                  # (B,nc,H)
+
+    def step(state, inp):
+        dc, cst = inp                                         # (B,H), (B,H,P,N)
+        prev = state
+        new = prev * dc[:, :, None, None] + cst
+        return new, prev                                      # emit state BEFORE chunk
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, Pd, N), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init_state,
+        (decay_chunk.transpose(1, 0, 2), chunk_state.transpose(1, 0, 2, 3, 4)),
+        unroll=nc if unroll else 1)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,nc,H,P,N)
+
+    # inter-chunk output: y_t += exp(cum_t) * C_t . state_prev
+    y_inter = jnp.einsum("bnth,bntk,bnhpk->bnthp",
+                         jnp.exp(cum), cs, prev_states)
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y.astype(x.dtype), final
+
+
+def ssm_forward(params: Params, cfg: ArchConfig, h: jax.Array, *, mode: str,
+                cache: Optional[Params] = None, unroll: bool = False
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """Full Mamba2 block. mode: train/prefill (full seq) or decode (S=1)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    B = h.shape[0]
+    proj = h @ params["in_proj"]["w"].astype(h.dtype)
+    z, xbc, dt = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        # conv: shift window
+        win = jnp.concatenate([cache["conv"], xbc], axis=1)    # (B,W,C)
+        xbc_c = sum(win[:, i, :] * params["conv"]["w"][i]
+                    for i in range(s.conv_width))
+        xbc_c = swish(xbc_c + params["conv"]["b"].astype(xbc_c.dtype))[:, None, :]
+        x_in, b_in, c_in = jnp.split(xbc_c, [d_inner, d_inner + s.state_dim], -1)
+        xh = x_in.reshape(B, n_heads, s.head_dim)
+        a = jnp.exp(params["log_a"].astype(jnp.float32))
+        g = jnp.exp(-dt[:, 0, :] * a)                          # (B,H)
+        state = cache["state"]
+        upd = jnp.einsum("bh,bk,bhp->bhpk", dt[:, 0, :],
+                         b_in[:, 0].astype(jnp.float32), xh.astype(jnp.float32))
+        state = state * g[:, :, None, None] + upd
+        y = jnp.einsum("bk,bhpk->bhp", c_in[:, 0].astype(jnp.float32), state)
+        y = y + params["d_skip"].astype(jnp.float32)[None, :, None] \
+            * xh.astype(jnp.float32)
+        y = y.reshape(B, 1, d_inner).astype(h.dtype)
+        new_cache = {"conv": win[:, 1:, :], "state": state}
+    else:
+        xbc_c = _conv_train(params, xbc, s.conv_width)
+        x_in, b_in, c_in = jnp.split(xbc_c, [d_inner, d_inner + s.state_dim], -1)
+        S = h.shape[1]
+        xh = x_in.reshape(B, S, n_heads, s.head_dim)
+        chunk = min(s.chunk_size, S)
+        y, final = ssd_chunked(xh, b_in, c_in, dt, params["log_a"],
+                               chunk=chunk, unroll=unroll)
+        y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+            * xh.astype(jnp.float32)
+        y = y.reshape(B, S, d_inner).astype(h.dtype)
+        if mode == "prefill":
+            new_cache = {"conv": xbc[:, -(s.conv_width - 1):, :], "state": final}
+
+    y = y * swish(z)
+    y = rms_norm(params["norm"], y, cfg.rms_eps)
+    return y @ params["out_proj"]["w"].astype(h.dtype), new_cache
+
+
+def ssm_init_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    return {"conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+            "state": jnp.zeros((batch, n_heads, s.head_dim, s.state_dim),
+                               jnp.float32)}

@@ -1,0 +1,428 @@
+"""Decoder-only transformer stack: assembly, scan-over-layers, train/prefill/
+decode forwards for every family (dense / moe / ssm / hybrid / vlm).
+
+Layers are stacked (vmapped init) and consumed by ``jax.lax.scan`` so the
+512-way SPMD HLO stays one-layer-sized (compile time) and remat bounds
+activation memory. Heterogeneous stacks (gemma2 local/global alternation,
+zamba2 shared-attention interleave, deepseek-v2 leading dense layer) are
+driven by per-layer flag arrays passed as scan xs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Params, PRNGKey, dense_init, split_keys
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (embed, embedding_init, rms_norm,
+                                 rms_norm_init, softcap, unembed)
+
+LARGE_WINDOW = jnp.int32(2 ** 30)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / forward by family
+# ---------------------------------------------------------------------------
+
+def _dense_layer_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    ks = split_keys(key, ["attn", "ffn"])
+    p = {"ln1": rms_norm_init(cfg.d_model), "attn": attn_mod.attn_init(ks["attn"], cfg),
+         "ln2": rms_norm_init(cfg.d_model)}
+    if cfg.moe is not None:
+        p["moe"] = ffn_mod.moe_init(ks["ffn"], cfg)
+    else:
+        p["ffn"] = ffn_mod.ffn_init(ks["ffn"], cfg)
+    if cfg.post_norms:
+        p["ln1b"] = rms_norm_init(cfg.d_model)
+        p["ln2b"] = rms_norm_init(cfg.d_model)
+    return p
+
+
+def _dense_dense_layer_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    """Dense-FFN layer for MoE archs' leading dense layers (deepseek-v2)."""
+    ks = split_keys(key, ["attn", "ffn"])
+    d_ff = cfg.moe.d_ff_expert * (cfg.moe.top_k + cfg.moe.num_shared_experts) \
+        if cfg.moe else cfg.d_ff
+    return {"ln1": rms_norm_init(cfg.d_model),
+            "attn": attn_mod.attn_init(ks["attn"], cfg),
+            "ln2": rms_norm_init(cfg.d_model),
+            "ffn": ffn_mod.glu_ffn_init(ks["ffn"], cfg.d_model, d_ff)}
+
+
+def _rwkv_layer_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    from repro.models.layers import layer_norm_init
+    p = rwkv_mod.rwkv_init(key, cfg)
+    p["ln1"] = layer_norm_init(cfg.d_model)
+    p["ln2"] = layer_norm_init(cfg.d_model)
+    return p
+
+
+def _hybrid_layer_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    return {"ln": rms_norm_init(cfg.d_model),
+            "mamba": ssm_mod.ssm_init(key, cfg)}
+
+
+def _shared_attn_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    """Zamba2 shared transformer block (one param set, many invocations)."""
+    ks = split_keys(key, ["attn", "ffn", "proj"])
+    p = {"ln1": rms_norm_init(cfg.d_model),
+         "attn": attn_mod.attn_init(ks["attn"], cfg),
+         "ln2": rms_norm_init(cfg.d_model),
+         "ffn": ffn_mod.glu_ffn_init(ks["ffn"], cfg.d_model, cfg.d_ff)}
+    if cfg.hybrid.concat_embedding:
+        p["proj"] = dense_init(ks["proj"], 2 * cfg.d_model, cfg.d_model, bias=False)
+    return p
+
+
+def layer_init(key: PRNGKey, cfg: ArchConfig) -> Params:
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        return _rwkv_layer_init(key, cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_layer_init(key, cfg)
+    return _dense_layer_init(key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# whole-model params
+# ---------------------------------------------------------------------------
+
+def init_params(key: PRNGKey, cfg: ArchConfig) -> Params:
+    ks = split_keys(key, ["embed", "layers", "head", "shared", "front",
+                          "unembed", "aux"])
+    n_scan = cfg.num_layers - (cfg.moe.first_dense_layers if cfg.moe else 0)
+    layer_keys = jax.random.split(ks["layers"], n_scan)
+    params: Params = {
+        "embed": embedding_init(ks["embed"], cfg.vocab_size, cfg.d_model),
+        "layers": jax.vmap(lambda k: layer_init(k, cfg))(layer_keys),
+        "ln_f": (rms_norm_init(cfg.d_model) if cfg.family != "ssm"
+                 else {"scale": jnp.ones((cfg.d_model,)),
+                       "bias": jnp.zeros((cfg.d_model,))}),
+    }
+    if cfg.moe and cfg.moe.first_dense_layers:
+        hkeys = jax.random.split(ks["head"], cfg.moe.first_dense_layers)
+        params["first_layers"] = [
+            _dense_dense_layer_init(k, cfg) for k in hkeys]
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _shared_attn_init(ks["shared"], cfg)
+    if cfg.frontend.kind == "vision":
+        k1, k2 = jax.random.split(ks["front"])
+        params["projector"] = {
+            "fc1": dense_init(k1, cfg.frontend.embed_dim, cfg.d_model),
+            "fc2": dense_init(k2, cfg.d_model, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks["unembed"], cfg.d_model,
+                                       cfg.vocab_size, bias=False)
+    if cfg.aux_head:
+        params["aux_head"] = dense_init(ks["aux"], cfg.d_model, cfg.d_model,
+                                        bias=False)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer flags (heterogeneous stacks)
+# ---------------------------------------------------------------------------
+
+def layer_flags(cfg: ArchConfig, shape_seq: int, long_decode: bool) -> Dict[str, jax.Array]:
+    """Per-scanned-layer arrays driving scan-body behaviour."""
+    n_scan = cfg.num_layers - (cfg.moe.first_dense_layers if cfg.moe else 0)
+    idx = jnp.arange(n_scan)
+    if cfg.local_global_period:
+        # gemma2: even layers local (sliding window), odd layers global.
+        local = (idx % cfg.local_global_period) == 0
+        global_window = jnp.int32(32768) if long_decode else LARGE_WINDOW
+        window = jnp.where(local, jnp.int32(cfg.sliding_window), global_window)
+    elif cfg.sliding_window:
+        window = jnp.full((n_scan,), cfg.sliding_window, jnp.int32)
+    else:
+        window = None   # uniform full attention: keep static so §Perf
+                        # triangle pruning stays applicable
+    flags = {}
+    if window is not None:
+        flags["window"] = window
+    if cfg.family == "hybrid":
+        k = cfg.hybrid.attn_every
+        flags["use_attn"] = (idx % k) == (k - 1)
+    return flags
+
+
+# ---------------------------------------------------------------------------
+# scan body
+# ---------------------------------------------------------------------------
+
+def _attn_ffn_layer(lp: Params, cfg: ArchConfig, h, positions, window, *,
+                    mode, cache, mesh, triangle,
+                    unroll=False) -> Tuple[jax.Array, Any, jax.Array]:
+    a, new_cache = attn_mod.attn_forward(
+        lp["attn"], cfg, rms_norm(lp["ln1"], h, cfg.rms_eps), positions,
+        window=window, mode=mode, cache=cache, triangle=triangle,
+        unroll=unroll, mesh=mesh)
+    if cfg.post_norms:
+        a = rms_norm(lp["ln1b"], a, cfg.rms_eps)
+    h = h + a
+    x = rms_norm(lp["ln2"], h, cfg.rms_eps)
+    lb = jnp.float32(0.0)
+    if "moe" in lp:
+        f, lb = ffn_mod.moe_forward(lp["moe"], cfg, x, mesh=mesh)
+    else:
+        f = ffn_mod.ffn_forward(lp["ffn"], cfg, x)
+    if cfg.post_norms:
+        f = rms_norm(lp["ln2b"], f, cfg.rms_eps)
+    return h + f, new_cache, lb
+
+
+def _rwkv_layer(lp: Params, cfg: ArchConfig, h, *, mode, cache,
+                chunked=False, unroll=False, mesh=None):
+    from repro.models.layers import layer_norm
+    a, c1 = rwkv_mod.time_mix(lp["tm"], cfg, layer_norm(lp["ln1"], h),
+                              cache=cache, mode=mode, chunked=chunked,
+                              unroll=unroll, mesh=mesh)
+    h = h + a
+    f, c2 = rwkv_mod.channel_mix(lp["cm"], cfg, layer_norm(lp["ln2"], h),
+                                 cache=cache, mode=mode)
+    new_cache = None
+    if c1 is not None or c2 is not None:
+        new_cache = {**(c1 or {}), **(c2 or {})}
+    return h + f, new_cache
+
+
+def _hybrid_layer(lp: Params, shared: Params, cfg: ArchConfig, h, emb0,
+                  positions, use_attn, window, *, mode, cache, unroll=False):
+    m, new_ssm_cache = ssm_mod.ssm_forward(
+        lp["mamba"], cfg, rms_norm(lp["ln"], h, cfg.rms_eps),
+        mode=mode, cache=None if cache is None else cache["ssm"])
+    h = h + m
+
+    def with_attn(h, kv_cache):
+        x = h
+        if cfg.hybrid.concat_embedding:
+            x = jnp.concatenate([h, emb0], axis=-1) @ \
+                shared["proj"]["w"].astype(h.dtype)
+        a, new_kv = attn_mod.attn_forward(
+            shared["attn"], cfg, rms_norm(shared["ln1"], x, cfg.rms_eps),
+            positions, window=window, mode=mode, cache=kv_cache,
+            unroll=unroll)
+        y = h + a
+        f = ffn_mod.glu_ffn(shared["ffn"], rms_norm(shared["ln2"], y, cfg.rms_eps))
+        return y + f, new_kv
+
+    kv_cache = None if cache is None else cache["kv"]
+    if mode == "train":
+        # flag-gated; cond avoids paying attention FLOPs on non-attn layers
+        h = jax.lax.cond(use_attn, lambda hh: with_attn(hh, None)[0],
+                         lambda hh: hh, h)
+        new_kv = None
+    elif mode == "prefill":
+        # no incoming cache: the skip branch emits a zeros cache with the
+        # same structure the attention branch would produce
+        B, S = h.shape[0], h.shape[1]
+        kv_, hd_ = cfg.num_kv_heads, cfg.resolved_head_dim
+
+        def yes_p(hh):
+            return with_attn(hh, None)
+
+        def no_p(hh):
+            zero = {"k": jnp.zeros((B, S, kv_, hd_), hh.dtype),
+                    "v": jnp.zeros((B, S, kv_, hd_), hh.dtype),
+                    "len": jnp.int32(S)}
+            return hh, zero
+        h, new_kv = jax.lax.cond(use_attn, yes_p, no_p, h)
+    else:
+        def yes(hh, cc):
+            return with_attn(hh, cc)
+        def no(hh, cc):
+            return hh, {k: v for k, v in cc.items()}
+        h, new_kv = jax.lax.cond(use_attn, yes, no, h, kv_cache)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"ssm": new_ssm_cache, "kv": new_kv}
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model forward
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ForwardOptions:
+    mesh: Optional[jax.sharding.Mesh] = None
+    triangle_attention: bool = False     # §Perf: causal chunk pruning
+    rwkv_chunked: bool = False           # §Perf: chunked WKV
+    long_decode: bool = False            # window global layers (gemma2 @500k)
+    unroll_scans: bool = False           # dry-run cost accounting: unroll
+                                         # inner scans so cost_analysis sees
+                                         # every trip (never for real runs)
+    remat_dots: bool = False             # §Perf: save matmul outputs instead
+                                         # of recomputing everything (less
+                                         # recompute traffic, more live bytes)
+    pin_wkv: bool = False                # §Perf: head-sharded WKV constraint
+
+
+def _embed_inputs(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+                  compute_dtype) -> Tuple[jax.Array, jax.Array]:
+    """Token (+frontend) embedding. Returns (h, positions)."""
+    tokens = batch["tokens"]
+    h = embed(params["embed"], tokens, compute_dtype,
+              scale=cfg.local_global_period > 0)
+    if cfg.frontend.kind == "vision" and "patch_embeddings" in batch:
+        pe = batch["patch_embeddings"].astype(compute_dtype)
+        p1 = params["projector"]
+        v = jax.nn.gelu(pe @ p1["fc1"]["w"].astype(compute_dtype)
+                        + p1["fc1"]["b"].astype(compute_dtype))
+        v = v @ p1["fc2"]["w"].astype(compute_dtype) \
+            + p1["fc2"]["b"].astype(compute_dtype)
+        h = jnp.concatenate([v, h], axis=1)          # anyres tiles prepended
+    positions = jnp.arange(h.shape[1])[None, :]
+    return h, jnp.broadcast_to(positions, h.shape[:2])
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+            mode: str, caches: Optional[Params] = None,
+            opts: ForwardOptions = ForwardOptions(),
+            ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Run the stack. Returns (final_hidden, new_caches, moe_lb_loss).
+
+    mode: "train" | "prefill" | "decode". For decode, ``batch["tokens"]`` is
+    (B, 1) and ``batch["position"]`` is the scalar cache position.
+    """
+    compute = jnp.dtype(cfg.compute_dtype)
+    h, positions = _embed_inputs(params, cfg, batch, compute)
+    if mode == "decode":
+        positions = jnp.broadcast_to(batch["position"][None, None],
+                                     (h.shape[0], 1))
+    emb0 = h
+    flags = layer_flags(cfg, h.shape[1], opts.long_decode)
+    mesh = opts.mesh
+
+    def constrain(x):
+        if mesh is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec
+        batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, PartitionSpec(batch_axes)))
+
+    lb_total = jnp.float32(0.0)
+
+    # leading dense layers (deepseek-v2)
+    new_first_caches = None
+    if cfg.moe and cfg.moe.first_dense_layers and "first_layers" in params:
+        collected = []
+        for i, lp in enumerate(params["first_layers"]):
+            c = None if caches is None else \
+                jax.tree_util.tree_map(lambda x: x[i], caches["first"])
+            h, nc, _ = _attn_ffn_layer(
+                lp, dataclasses.replace(cfg, moe=None), h, positions,
+                None, mode=mode, cache=c, mesh=mesh,
+                triangle=opts.triangle_attention,
+                unroll=opts.unroll_scans)
+            collected.append(nc)
+        if mode in ("prefill", "decode") and collected[0] is not None:
+            new_first_caches = jax.tree_util.tree_map(
+                lambda *t: jnp.stack(t), *collected)
+
+    def body(carry, xs):
+        h, lb = carry
+        lp = xs["layer"]
+        fl = xs["flags"]
+        cache = xs.get("cache")
+        window = fl.get("window")
+        h = constrain(h)
+        # NOTE: unroll_scans is NOT forwarded to the ssd/wkv chunk-state
+        # scans — their intra-chunk compute is vectorized outside the scan,
+        # so the loop body carries only the (tiny) state recombine and
+        # unrolling it explodes compile time for ~0 cost-accuracy gain.
+        if cfg.family == "ssm":
+            h, new_cache = _rwkv_layer(lp, cfg, h, mode=mode, cache=cache,
+                                       chunked=opts.rwkv_chunked,
+                                       mesh=mesh if opts.pin_wkv else None)
+        elif cfg.family == "hybrid":
+            h, new_cache = _hybrid_layer(
+                lp, params["shared_attn"], cfg, h, emb0, positions,
+                fl["use_attn"], window, mode=mode, cache=cache,
+                unroll=opts.unroll_scans)
+        else:
+            h, new_cache, lb_i = _attn_ffn_layer(
+                lp, cfg, h, positions, window, mode=mode, cache=cache,
+                mesh=mesh, triangle=opts.triangle_attention,
+                unroll=opts.unroll_scans)
+            lb = lb + lb_i
+        return (h, lb), new_cache
+
+    body_fn = body
+    if cfg.remat and mode == "train":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if opts.remat_dots
+                  else jax.checkpoint_policies.nothing_saveable)
+        body_fn = jax.checkpoint(body, policy=policy)
+
+    xs: Dict[str, Any] = {"layer": params["layers"], "flags": flags}
+    if caches is not None:
+        xs["cache"] = caches["layers"]
+
+    if cfg.scan_layers:
+        (h, lb_total), new_layer_caches = jax.lax.scan(body_fn, (h, lb_total), xs)
+    else:
+        n = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+        outs = []
+        for i in range(n):
+            sl = jax.tree_util.tree_map(lambda x: x[i], xs)
+            (h, lb_total), nc = body_fn((h, lb_total), sl)
+            outs.append(nc)
+        new_layer_caches = (jax.tree_util.tree_map(
+            lambda *t: jnp.stack(t), *outs) if outs[0] is not None else None)
+
+    if cfg.family == "ssm":
+        from repro.models.layers import layer_norm
+        h = layer_norm(params["ln_f"], h)
+    else:
+        h = rms_norm(params["ln_f"], h, cfg.rms_eps)
+
+    new_caches = None
+    if mode in ("prefill", "decode") and new_layer_caches is not None:
+        new_caches = {"layers": new_layer_caches}
+        if new_first_caches is not None:
+            new_caches["first"] = new_first_caches
+    return h, new_caches, lb_total
+
+
+def logits_from_hidden(params: Params, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        lg = unembed(params["embed"], h, h.dtype)
+    else:
+        lg = h @ params["unembed"]["w"].astype(h.dtype)
+    return softcap(lg.astype(jnp.float32), cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Params:
+    n_scan = cfg.num_layers - (cfg.moe.first_dense_layers if cfg.moe else 0)
+
+    def one_layer():
+        if cfg.family == "ssm":
+            return rwkv_mod.rwkv_init_cache(cfg, batch, dtype)
+        if cfg.family == "hybrid":
+            return {"ssm": ssm_mod.ssm_init_cache(cfg, batch, dtype),
+                    "kv": attn_mod.init_cache(cfg, batch, max_len, dtype)}
+        return attn_mod.init_cache(cfg, batch, max_len, dtype)
+
+    layer = one_layer()
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_scan,) + x.shape).copy(), layer)
+    caches: Params = {"layers": stacked}
+    if cfg.moe and cfg.moe.first_dense_layers:
+        fl = attn_mod.init_cache(cfg, batch, max_len, dtype)
+        caches["first"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                x, (cfg.moe.first_dense_layers,) + x.shape).copy(), fl)
+    return caches

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, global_norm, warmup_cosine)

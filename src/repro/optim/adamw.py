@@ -1,0 +1,89 @@
+"""Optimizers (pure-JAX, no optax): Adam / AdamW with grad clipping.
+
+State is a pytree mirroring params: {"mu": .., "nu": .., "count": scalar}.
+Sharding note: mu/nu inherit the parameter sharding (same tree structure),
+so FSDP partitioning of params automatically partitions optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: Optional[float] = None
+    # schedule(count) -> multiplier; None = constant lr
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+
+def adamw_init(params: Any) -> Any:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: Any, params: Any
+                 ) -> Tuple[Any, Any]:
+    """Returns (new_params, new_state)."""
+    if cfg.grad_clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    lr = cfg.lr * (cfg.schedule(count) if cfg.schedule is not None else 1.0)
+    bc1 = 1.0 - cfg.b1 ** c
+    bc2 = 1.0 - cfg.b2 ** c
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_m, "nu": new_v, "count": count}
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def warmup_cosine(warmup_steps: int, total_steps: int, min_frac: float = 0.1
+                  ) -> Callable[[jax.Array], jax.Array]:
+    def sched(count: jax.Array) -> jax.Array:
+        c = count.astype(jnp.float32)
+        warm = c / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((c - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return sched

@@ -1,0 +1,2 @@
+from repro.rl.envs import ENVS, EnvSpec, make_env, rollout_return
+from repro.rl.runner import RunConfig, RunResult, run_training

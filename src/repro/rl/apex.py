@@ -1,0 +1,112 @@
+"""Ape-X-like distributed training (paper §3.2, Fig. 2/11).
+
+Topology (Horgan et al. 2018 adapted per Stooke & Abbeel 2018 and DESIGN.md
+§2): N_core x N_env vectorized actors collect transitions with the *latest*
+policy parameters while a single learner takes gradient steps against the
+shared prioritized replay. On this substrate the actor pool is a single
+vmapped device program (``collect``): on a TPU mesh it runs sharded over the
+``data`` axis via ``shard_map`` (see ``collect_sharded``) — mesh-axis
+decoupling replacing the paper's process decoupling.
+
+``steps_per_update`` controls the on-policy-ness knob the paper cares about
+(more collected transitions per gradient step => replay distribution closer
+to the current policy; Fedus et al. 2020).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import Params, PRNGKey
+from repro.rl.envs import EnvSpec, EnvState
+
+
+@dataclasses.dataclass(frozen=True)
+class ApexConfig:
+    n_core: int = 2            # paper A.1
+    n_env: int = 32            # paper A.1
+    collect_per_update: int = 1   # env steps (per env) per learner step
+    warmup_steps: int = 1000      # random policy pre-fill (paper A.4)
+
+    @property
+    def num_actors(self) -> int:
+        return self.n_core * self.n_env
+
+
+def init_actor_states(env: EnvSpec, key: PRNGKey, n: int) -> EnvState:
+    return jax.vmap(env.reset)(jax.random.split(key, n))
+
+
+@partial(jax.jit, static_argnums=(0, 1, 4))
+def collect(env: EnvSpec, policy_sample: Callable, params: Params,
+            states: EnvState, steps: int, key: PRNGKey
+            ) -> Tuple[EnvState, Dict[str, jax.Array]]:
+    """Run ``steps`` vectorized env steps with the current policy.
+
+    policy_sample(params, obs, key) -> action. Episodes auto-reset on the
+    env's time limit. Returns (new_states, transitions flattened to
+    (steps*n_actors, ...)).
+    """
+    n = states.q.shape[0]
+
+    def step_once(carry, k):
+        st = carry
+        obs = jax.vmap(env.obs)(st)
+        acts = policy_sample(params, obs, k)
+        st2, obs2, rew, done = jax.vmap(env.step)(st, acts)
+        # time-limit reset
+        timeout = st2.t >= env.max_episode_steps
+        need_reset = jnp.logical_or(done, timeout)
+        reset_keys = jax.random.split(k, n)
+        fresh = jax.vmap(env.reset)(reset_keys)
+        st3 = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(
+                need_reset.reshape((-1,) + (1,) * (a.ndim - 1)), b, a),
+            st2, fresh)
+        tr = {"obs": obs, "act": acts, "rew": rew, "next_obs": obs2,
+              # bootstrap through timeouts (done=0), terminal otherwise
+              "done": jnp.where(timeout, 0.0, done.astype(jnp.float32))}
+        return st3, tr
+
+    keys = jax.random.split(key, steps)
+    states, trs = jax.lax.scan(step_once, states, keys)
+    flat = jax.tree_util.tree_map(
+        lambda x: x.reshape((-1,) + x.shape[2:]), trs)
+    return states, flat
+
+
+def collect_sharded(env: EnvSpec, policy_sample: Callable, mesh,
+                    params: Params, states: EnvState, steps: int,
+                    key: PRNGKey):
+    """Mesh-parallel actor pool: actors sharded over the 'data' axis.
+
+    TPU adaptation of Ape-X's actor processes (DESIGN.md §2): each data-shard
+    runs its slice of the vectorized envs with replicated params.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def body(params, states, key):
+        key = jax.random.fold_in(key, jax.lax.axis_index("data"))
+        return collect(env, policy_sample, params, states, steps, key)
+
+    n_data = mesh.shape["data"]
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), jax.tree_util.tree_map(lambda _: P("data"), states),
+                  P()),
+        out_specs=(jax.tree_util.tree_map(lambda _: P("data"), states),
+                   P("data")),
+        check_vma=False,
+    )(params, states, key)
+
+
+def random_policy(act_dim: int):
+    def sample(params, obs, key):
+        return jax.random.uniform(key, (obs.shape[0], act_dim),
+                                  minval=-1.0, maxval=1.0)
+    return sample

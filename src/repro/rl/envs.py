@@ -1,0 +1,262 @@
+"""Pure-JAX continuous-control environments (MuJoCo stand-ins; DESIGN.md §7).
+
+The container cannot run MuJoCo, so the paper's locomotion suite is replaced
+with analytic rigid-body tasks implemented directly in JAX. They are fully
+vmappable/jittable — on TPU this makes the *simulator itself* a device
+program, which is the TPU-native analogue of the paper's CPU actor processes.
+
+Env API (functional):
+    env.reset(key)                 -> EnvState
+    env.step(state, action)        -> (EnvState, obs, reward, done)
+    env.obs(state)                 -> observation
+    env.obs_dim / act_dim / max_episode_steps
+
+All dynamics use semi-implicit Euler integration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EnvState(NamedTuple):
+    q: jax.Array            # generalized positions
+    qd: jax.Array           # generalized velocities
+    t: jax.Array            # step counter (int32)
+    key: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    obs_dim: int
+    act_dim: int
+    max_episode_steps: int
+    reset: Callable
+    step: Callable
+    obs: Callable
+
+
+def _mk_state(key, q, qd):
+    return EnvState(q=q, qd=qd, t=jnp.int32(0), key=key)
+
+
+# ---------------------------------------------------------------------------
+# Pendulum swing-up (obs: cos, sin, thdot)
+# ---------------------------------------------------------------------------
+
+def make_pendulum() -> EnvSpec:
+    g, m, l, dt = 10.0, 1.0, 1.0, 0.05
+    max_speed, max_torque = 8.0, 2.0
+
+    def obs(s: EnvState):
+        th = s.q[0]
+        return jnp.stack([jnp.cos(th), jnp.sin(th), s.qd[0] / max_speed])
+
+    def reset(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        th = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
+        thd = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+        return _mk_state(k3, jnp.array([th]), jnp.array([thd]))
+
+    def step(s: EnvState, a: jax.Array):
+        u = jnp.clip(a[0], -1, 1) * max_torque
+        th, thd = s.q[0], s.qd[0]
+        norm_th = jnp.mod(th + jnp.pi, 2 * jnp.pi) - jnp.pi
+        cost = norm_th ** 2 + 0.1 * thd ** 2 + 0.001 * u ** 2
+        thd = jnp.clip(thd + (3 * g / (2 * l) * jnp.sin(th)
+                              + 3.0 / (m * l ** 2) * u) * dt,
+                       -max_speed, max_speed)
+        th = th + thd * dt
+        ns = EnvState(q=jnp.array([th]), qd=jnp.array([thd]),
+                      t=s.t + 1, key=s.key)
+        return ns, obs(ns), -cost, jnp.bool_(False)
+
+    return EnvSpec("pendulum", 3, 1, 200, reset, step, obs)
+
+
+# ---------------------------------------------------------------------------
+# Cartpole swing-up (obs: x, xd, cos, sin, thd)
+# ---------------------------------------------------------------------------
+
+def make_cartpole_swingup() -> EnvSpec:
+    mc, mp, l, g, dt = 1.0, 0.1, 0.5, 9.8, 0.02
+    force_mag = 10.0
+
+    def obs(s: EnvState):
+        x, th = s.q
+        xd, thd = s.qd
+        return jnp.stack([x / 2.4, xd, jnp.cos(th), jnp.sin(th), thd])
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        q0 = jnp.array([0.0, jnp.pi]) + 0.05 * jax.random.normal(k1, (2,))
+        return _mk_state(k2, q0, jnp.zeros(2))
+
+    def step(s: EnvState, a: jax.Array):
+        f = jnp.clip(a[0], -1, 1) * force_mag
+        x, th = s.q
+        xd, thd = s.qd
+        sin, cos = jnp.sin(th), jnp.cos(th)
+        tmp = (f + mp * l * thd ** 2 * sin) / (mc + mp)
+        thacc = (g * sin - cos * tmp) / (l * (4.0 / 3 - mp * cos ** 2 / (mc + mp)))
+        xacc = tmp - mp * l * thacc * cos / (mc + mp)
+        xd = xd + xacc * dt
+        x = jnp.clip(x + xd * dt, -2.4, 2.4)
+        thd = thd + thacc * dt
+        th = th + thd * dt
+        ns = EnvState(q=jnp.array([x, th]), qd=jnp.array([xd, thd]),
+                      t=s.t + 1, key=s.key)
+        upright = jnp.cos(th)
+        reward = upright - 0.01 * xd ** 2 - 0.001 * f ** 2 - 0.1 * jnp.abs(x)
+        return ns, obs(ns), reward, jnp.bool_(False)
+
+    return EnvSpec("cartpole_swingup", 5, 1, 250, reset, step, obs)
+
+
+# ---------------------------------------------------------------------------
+# Reacher-2: 2-link arm reaching a random target
+# obs: cos/sin of 2 joints, 2 joint vels, target xy, fingertip-target delta
+# ---------------------------------------------------------------------------
+
+def make_reacher2() -> EnvSpec:
+    l1, l2, dt = 0.1, 0.11, 0.02
+
+    def fingertip(q):
+        x = l1 * jnp.cos(q[0]) + l2 * jnp.cos(q[0] + q[1])
+        y = l1 * jnp.sin(q[0]) + l2 * jnp.sin(q[0] + q[1])
+        return jnp.array([x, y])
+
+    def obs(s: EnvState):
+        tgt = s.q[2:4]
+        ft = fingertip(s.q[:2])
+        return jnp.concatenate([jnp.cos(s.q[:2]), jnp.sin(s.q[:2]),
+                                s.qd[:2], tgt, ft - tgt])
+
+    def reset(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        joints = jax.random.uniform(k1, (2,), minval=-jnp.pi, maxval=jnp.pi)
+        r = jax.random.uniform(k2, (), minval=0.05, maxval=0.2)
+        ang = jax.random.uniform(k3, (), minval=-jnp.pi, maxval=jnp.pi)
+        tgt = jnp.array([r * jnp.cos(ang), r * jnp.sin(ang)])
+        return _mk_state(k3, jnp.concatenate([joints, tgt]),
+                         jnp.zeros(4))
+
+    def step(s: EnvState, a: jax.Array):
+        u = jnp.clip(a, -1, 1) * 0.5
+        qd = s.qd[:2] * 0.95 + u * dt * 40.0
+        q = s.q[:2] + qd * dt
+        ns = EnvState(q=jnp.concatenate([q, s.q[2:4]]),
+                      qd=jnp.concatenate([qd, jnp.zeros(2)]),
+                      t=s.t + 1, key=s.key)
+        dist = jnp.linalg.norm(fingertip(q) - s.q[2:4])
+        reward = -dist - 0.01 * jnp.sum(jnp.square(u))
+        return ns, obs(ns), reward, jnp.bool_(False)
+
+    return EnvSpec("reacher2", 10, 2, 100, reset, step, obs)
+
+
+# ---------------------------------------------------------------------------
+# PointMass-2D with drag: reach the origin from random start
+# ---------------------------------------------------------------------------
+
+def make_pointmass() -> EnvSpec:
+    dt = 0.05
+
+    def obs(s: EnvState):
+        return jnp.concatenate([s.q, s.qd])
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        q = jax.random.uniform(k1, (2,), minval=-1.0, maxval=1.0)
+        return _mk_state(k2, q, jnp.zeros(2))
+
+    def step(s: EnvState, a: jax.Array):
+        u = jnp.clip(a, -1, 1)
+        qd = s.qd * 0.9 + u * dt * 4.0
+        q = s.q + qd * dt
+        ns = EnvState(q=q, qd=qd, t=s.t + 1, key=s.key)
+        reward = -jnp.linalg.norm(q) - 0.05 * jnp.sum(jnp.square(u))
+        return ns, obs(ns), reward, jnp.bool_(False)
+
+    return EnvSpec("pointmass", 4, 2, 100, reset, step, obs)
+
+
+# ---------------------------------------------------------------------------
+# Acrobot (continuous torque on second joint), swing-up reward
+# ---------------------------------------------------------------------------
+
+def make_acrobot() -> EnvSpec:
+    m1 = m2 = 1.0
+    l1 = 1.0
+    lc1 = lc2 = 0.5
+    i1 = i2 = 1.0
+    g, dt = 9.8, 0.05
+
+    def obs(s: EnvState):
+        return jnp.stack([jnp.cos(s.q[0]), jnp.sin(s.q[0]),
+                          jnp.cos(s.q[1]), jnp.sin(s.q[1]),
+                          s.qd[0] / 5.0, s.qd[1] / 10.0])
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        q = 0.1 * jax.random.normal(k1, (2,))
+        return _mk_state(k2, q, jnp.zeros(2))
+
+    def step(s: EnvState, a: jax.Array):
+        tau = jnp.clip(a[0], -1, 1) * 2.0
+        th1, th2 = s.q
+        d1, d2 = s.qd
+        d2_ = m2 * (lc2 ** 2 + l1 * lc2 * jnp.cos(th2)) + i2
+        dmat = m1 * lc1 ** 2 + m2 * (l1 ** 2 + lc2 ** 2
+                                     + 2 * l1 * lc2 * jnp.cos(th2)) + i1 + i2
+        phi2 = m2 * lc2 * g * jnp.cos(th1 + th2 - jnp.pi / 2)
+        phi1 = (-m2 * l1 * lc2 * d2 ** 2 * jnp.sin(th2)
+                - 2 * m2 * l1 * lc2 * d2 * d1 * jnp.sin(th2)
+                + (m1 * lc1 + m2 * l1) * g * jnp.cos(th1 - jnp.pi / 2) + phi2)
+        dd2 = (tau + d2_ / dmat * phi1 - m2 * l1 * lc2 * d1 ** 2
+               * jnp.sin(th2) - phi2) / (m2 * lc2 ** 2 + i2 - d2_ ** 2 / dmat)
+        dd1 = -(d2_ * dd2 + phi1) / dmat
+        d1 = jnp.clip(d1 + dd1 * dt, -5, 5)
+        d2 = jnp.clip(d2 + dd2 * dt, -10, 10)
+        th1 = th1 + d1 * dt
+        th2 = th2 + d2 * dt
+        ns = EnvState(q=jnp.array([th1, th2]), qd=jnp.array([d1, d2]),
+                      t=s.t + 1, key=s.key)
+        height = -jnp.cos(th1) - jnp.cos(th1 + th2)
+        return ns, obs(ns), height - 0.01 * tau ** 2, jnp.bool_(False)
+
+    return EnvSpec("acrobot", 6, 1, 200, reset, step, obs)
+
+
+ENVS: Dict[str, Callable[[], EnvSpec]] = {
+    "pendulum": make_pendulum,
+    "cartpole_swingup": make_cartpole_swingup,
+    "reacher2": make_reacher2,
+    "pointmass": make_pointmass,
+    "acrobot": make_acrobot,
+}
+
+
+def make_env(name: str) -> EnvSpec:
+    return ENVS[name]()
+
+
+def rollout_return(env: EnvSpec, policy_fn, key: jax.Array,
+                   steps: int = 0) -> jax.Array:
+    """Deterministic-policy episode return (jitted evaluation loop)."""
+    steps = steps or env.max_episode_steps
+    s = env.reset(key)
+
+    def body(carry, _):
+        s, total = carry
+        a = policy_fn(env.obs(s))
+        s, _, r, _ = env.step(s, a)
+        return (s, total + r), None
+
+    (_, total), _ = jax.lax.scan(body, (s, jnp.float32(0.0)), None,
+                                 length=steps)
+    return total

@@ -1,0 +1,174 @@
+"""Training runner: glues algorithms, OFENet, replay and the Ape-X actor pool.
+
+``run_training`` is the single entry point used by benchmarks/examples; every
+paper ablation is reachable through ``RunConfig`` flags:
+
+* ``connectivity``           — mlp | resnet | densenet | d2rl   (Fig. 5)
+* ``num_units / num_layers`` — width/depth study                (Figs. 1/3/4)
+* ``use_ofenet``             — decoupled representation          (Figs. 6/7)
+* ``distributed``            — Ape-X actor pool vs 1-step loop   (Figs. 8/12)
+* ``algo``                   — sac | td3                         (Fig. 9)
+* ``prioritized``            — PER vs uniform replay
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import tree_size
+from repro.core.effective_rank import effective_rank
+from repro.core.ofenet import OFENetConfig
+from repro.rl import apex, replay as replay_mod, sac as sac_mod, td3 as td3_mod
+from repro.rl.envs import EnvSpec, make_env, rollout_return
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    env: str = "pendulum"
+    algo: str = "sac"
+    num_units: int = 256
+    num_layers: int = 2
+    connectivity: str = "densenet"
+    activation: str = "swish"
+    use_ofenet: bool = True
+    ofenet_units: int = 64
+    ofenet_layers: int = 4
+    distributed: bool = True
+    n_core: int = 2
+    n_env: int = 32
+    prioritized: bool = True
+    batch_size: int = 256
+    total_steps: int = 2000          # gradient steps (paper x-axis)
+    warmup_steps: int = 500
+    replay_capacity: int = 100_000
+    eval_every: int = 500
+    eval_episodes: int = 3
+    seed: int = 0
+    srank_every: int = 0             # 0 = off
+    keep_state: bool = False         # return final agent state (landscapes)
+
+
+def _build(cfg: RunConfig, env: EnvSpec):
+    ofe_cfg = None
+    if cfg.use_ofenet:
+        ofe_cfg = OFENetConfig(state_dim=env.obs_dim, action_dim=env.act_dim,
+                               num_layers=cfg.ofenet_layers,
+                               num_units=cfg.ofenet_units,
+                               connectivity="densenet", batch_norm=False)
+    common = dict(obs_dim=env.obs_dim, act_dim=env.act_dim,
+                  num_units=cfg.num_units, num_layers=cfg.num_layers,
+                  connectivity=cfg.connectivity, activation=cfg.activation,
+                  ofenet=ofe_cfg)
+    if cfg.algo == "sac":
+        acfg = sac_mod.SACConfig(**common)
+
+        def sample(params, s, key):
+            a, _ = sac_mod.sample_action(params, acfg, s, key)
+            return a
+
+        def mean(params, s):
+            return sac_mod.mean_action(params, acfg, s)
+        return acfg, sac_mod.sac_init, sac_mod.sac_update, sample, mean
+    acfg = td3_mod.TD3Config(**common)
+
+    def sample(params, s, key):
+        a = td3_mod.policy(params, acfg, s)
+        return jnp.clip(a + acfg.expl_noise * jax.random.normal(key, a.shape),
+                        -1, 1)
+
+    def mean(params, s):
+        return td3_mod.policy(params, acfg, s)
+    return acfg, td3_mod.td3_init, td3_mod.td3_update, sample, mean
+
+
+@dataclasses.dataclass
+class RunResult:
+    returns: List[float]
+    eval_steps: List[int]
+    sranks: List[int]
+    metrics: Dict[str, float]
+    param_count: int
+    wall_time_s: float
+    state: object = None             # only when cfg.keep_state
+    last_batch: object = None
+
+    @property
+    def final_return(self) -> float:
+        return float(np.mean(self.returns[-2:])) if self.returns else float("nan")
+
+    @property
+    def max_return(self) -> float:
+        return float(np.max(self.returns)) if self.returns else float("nan")
+
+
+def run_training(cfg: RunConfig, progress: Optional[Callable] = None
+                 ) -> RunResult:
+    t0 = time.time()
+    env = make_env(cfg.env)
+    acfg, init_fn, update_fn, sample_fn, mean_fn = _build(cfg, env)
+    key = jax.random.key(cfg.seed)
+    key, k_init, k_actor = jax.random.split(key, 3)
+    state = init_fn(k_init, acfg)
+    n_params = tree_size(state["params"])
+
+    buf_cls = (replay_mod.PrioritizedReplay if cfg.prioritized
+               else replay_mod.UniformReplay)
+    buffer = buf_cls(cfg.replay_capacity, env.obs_dim, env.act_dim)
+    rng = np.random.default_rng(cfg.seed)
+
+    n_actors = cfg.n_core * cfg.n_env if cfg.distributed else 1
+    actor_states = apex.init_actor_states(env, k_actor, n_actors)
+
+    def policy_sample(params, obs, k):
+        return sample_fn(params, obs, k)
+
+    update_jit = jax.jit(lambda st, b, k: update_fn(st, acfg, b, k))
+    rand = apex.random_policy(env.act_dim)
+
+    # --- warmup with random policy (paper A.4) -----------------------------
+    key, kw = jax.random.split(key)
+    warm_steps = max(cfg.warmup_steps // n_actors, 1)
+    actor_states, trs = apex.collect(env, rand, state["params"], actor_states,
+                                     warm_steps, kw)
+    buffer.add_batch(jax.tree_util.tree_map(np.asarray, trs))
+
+    returns, eval_steps, sranks = [], [], []
+    last_metrics: Dict[str, float] = {}
+    for step in range(1, cfg.total_steps + 1):
+        # collect (distributed: n_actors transitions per learner step)
+        key, kc, ku = jax.random.split(key, 3)
+        actor_states, trs = apex.collect(env, policy_sample, state["params"],
+                                         actor_states, 1, kc)
+        buffer.add_batch(jax.tree_util.tree_map(np.asarray, trs))
+
+        batch_np, idx, weights = buffer.sample(cfg.batch_size, rng)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        state, metrics = update_jit(state, batch, ku)
+        buffer.update_priorities(idx, np.asarray(metrics["priorities"]))
+
+        if cfg.srank_every and step % cfg.srank_every == 0:
+            sranks.append(int(effective_rank(metrics["q_features"])))
+        if step % cfg.eval_every == 0 or step == cfg.total_steps:
+            key, ke = jax.random.split(key)
+            rets = [float(rollout_return(
+                env, lambda o: mean_fn(state["params"], o[None])[0],
+                jax.random.fold_in(ke, i)))
+                for i in range(cfg.eval_episodes)]
+            returns.append(float(np.mean(rets)))
+            eval_steps.append(step)
+            last_metrics = {k: float(np.asarray(v).mean())
+                            for k, v in metrics.items()
+                            if np.asarray(v).ndim == 0}
+            if progress:
+                progress(step, returns[-1], last_metrics)
+
+    return RunResult(returns=returns, eval_steps=eval_steps, sranks=sranks,
+                     metrics=last_metrics, param_count=n_params,
+                     wall_time_s=time.time() - t0,
+                     state=state if cfg.keep_state else None,
+                     last_batch=batch if cfg.keep_state else None)

@@ -1,0 +1,1 @@
+from repro.roofline.analysis import Roofline, analyze, collective_bytes_from_hlo, model_flops

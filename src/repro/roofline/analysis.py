@@ -1,0 +1,200 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch, shape, mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes / (chips * HBM_BW)
+    collective = collective_bytes / (chips * ICI_BW)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are NOT
+in cost_analysis: we parse the optimized HLO text and sum operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops. Shapes in SPMD HLO are per-device, so summed operand bytes x chips gives
+fleet bytes; the roofline term divides by chips again => per-chip seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind from post-SPMD HLO text.
+
+    We count the *output* shape(s) on the lhs of each collective op (between
+    ``=`` and the op name) — for all-gather/all-reduce this equals the payload
+    a chip receives; for reduce-scatter/all-to-all it is the post-op shard (a
+    conservative lower bound on wire traffic). Find-based parsing: HLO lines
+    can be megabytes long and backtracking regexes blow up on them.
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        eq = line.find(" = ")
+        if eq < 0:
+            continue
+        for kind in _KINDS:
+            j = line.find(kind + "(", eq)
+            if j < 0:
+                j = line.find(kind + "-start(", eq)
+            if j < 0:
+                continue
+            seg = line[eq + 3: j]
+            total = sum(_shape_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(seg))
+            if total:
+                out[kind] = out.get(kind, 0) + total
+            break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # per-device, from cost_analysis
+    hlo_bytes: float              # per-device bytes accessed
+    collective_bytes: int         # per-device wire bytes (HLO shapes)
+    collectives: Dict[str, int]
+    model_flops: float            # 6*N*D (dense) / 6*N_active*D (MoE)
+    peak_memory_bytes: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs) — remat/redundancy waste probe."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "peak_memory_gib": self.peak_memory_bytes / 2**30,
+        }
+
+
+def model_flops(cfg, shape, n_tokens: Optional[int] = None) -> float:
+    """6*N*D with N = active params (excl. embeddings), D = tokens processed.
+
+    For decode shapes D = global_batch (one token each); factor 2 (not 6)
+    since there is no backward pass outside train mode.
+    """
+    n_active = active_params(cfg)
+    if n_tokens is None:
+        n_tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode"
+                                         else 1)
+    factor = 6.0 if shape.mode == "train" else 2.0
+    return factor * n_active * n_tokens
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: top_k + shared experts only)."""
+    d, L = cfg.d_model, cfg.num_layers
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = m.nope_head_dim + m.rope_head_dim
+        attn = (d * (m.q_lora_rank or 0)
+                + (m.q_lora_rank or d) * cfg.num_heads * qk
+                + d * (m.kv_lora_rank + m.rope_head_dim)
+                + m.kv_lora_rank * cfg.num_heads * (m.nope_head_dim + m.v_head_dim)
+                + cfg.num_heads * m.v_head_dim * d)
+    else:
+        attn = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
+            + cfg.num_heads * hd * d
+    if cfg.moe is not None:
+        ffn = 3 * d * cfg.moe.d_ff_expert * cfg.moe.top_k
+        if cfg.moe.num_shared_experts:
+            ffn += 3 * d * (cfg.moe.d_ff_shared
+                            or cfg.moe.d_ff_expert * cfg.moe.num_shared_experts)
+        ffn += d * cfg.moe.num_experts        # router
+    elif cfg.family == "ssm":                 # rwkv
+        ffn = 2 * d * cfg.d_ff + d * d        # channel mix
+        attn = 5 * d * d                      # time mix r,k,v,g,o
+    else:
+        ffn = 3 * d * cfg.d_ff
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.expand * d
+        attn = d * (2 * di + 2 * s.state_dim + di // s.head_dim) + di * d
+        ffn = 0.0
+        # shared attention block params reused every attn_every layers
+        shared = (4 * d * d * (2 if cfg.hybrid.concat_embedding else 1)
+                  + 3 * d * cfg.d_ff)
+        return L * attn + (L // cfg.hybrid.attn_every) * shared
+    per_layer = attn + ffn
+    total = L * per_layer
+    if cfg.family == "encdec":
+        total += cfg.encdec.encoder_layers * (4 * d * d + 2 * d * cfg.d_ff) \
+            + L * (2 * d * cfg.num_kv_heads * hd + d * cfg.num_heads * hd)
+    return float(total)
+
+
+def analyze(compiled, lowered_text: str, *, cfg, shape, mesh_name: str,
+            chips: int, arch: str) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):              # older API returns [dict]
+        cost = cost[0]
+    colls = collective_bytes_from_hlo(lowered_text)
+    mem = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0)
+                    + getattr(ma, "argument_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0)
+                    - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=sum(colls.values()), collectives=colls,
+        model_flops=model_flops(cfg, shape), peak_memory_bytes=mem)

@@ -1,0 +1,69 @@
+"""Inject the generated roofline table and perf log into EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.roofline.report
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+from repro.roofline.table import (load_rows, to_markdown,
+                                  to_markdown_multipod)
+
+TABLE_MARK = "<!-- ROOFLINE_TABLE -->"
+PERF_MARK = "<!-- PERF_LOG -->"
+
+
+def build_perf_log(perf_dir: str = "experiments/perf") -> str:
+    """Render experiments/perf/*.json iteration records as markdown."""
+    entries = []
+    p = Path(perf_dir)
+    if p.exists():
+        for f in sorted(p.glob("*.json")):
+            entries.append(json.loads(f.read_text()))
+    if not entries:
+        return "(perf iterations pending)"
+    out = []
+    for e in entries:
+        out.append(f"### {e['pair']} — iteration {e['iteration']}: "
+                   f"{e['title']}")
+        out.append(f"**Hypothesis.** {e['hypothesis']}")
+        out.append(f"**Change.** {e['change']}")
+        out.append("")
+        out.append("| term | before | after | Δ |")
+        out.append("|---|---|---|---|")
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s",
+                  "peak_memory_gib", "collective_bytes_per_chip"):
+            b, a = e["before"].get(k), e["after"].get(k)
+            if b is None or a is None:
+                continue
+            delta = (a - b) / b * 100 if b else 0.0
+            out.append(f"| {k} | {b:.4g} | {a:.4g} | {delta:+.1f}% |")
+        out.append("")
+        out.append(f"**Verdict.** {e['verdict']}")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    exp = Path("EXPERIMENTS.md")
+    text = exp.read_text()
+    rows = load_rows("experiments/dryrun")
+    table = (to_markdown(rows)
+             + "\n\n### Multi-pod (2x16x16) production compiles\n\n"
+             + to_markdown_multipod(rows))
+    text = re.sub(
+        rf"{TABLE_MARK}.*?(?=\n## )",
+        TABLE_MARK + "\n\n" + table + "\n\n", text, count=1, flags=re.S)
+    perf = build_perf_log()
+    text = re.sub(
+        rf"{PERF_MARK}.*?(?=\n## )",
+        PERF_MARK + "\n\n" + perf + "\n\n", text, count=1, flags=re.S)
+    exp.write_text(text)
+    print("EXPERIMENTS.md updated:",
+          len(load_rows("experiments/dryrun")), "roofline rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Assemble the roofline table from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.roofline.table [--dir experiments/dryrun]
+                                                  [--format md|csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+ARCH_ORDER = ["gemma2-2b", "tinyllama-1.1b", "whisper-small", "qwen2.5-32b",
+              "olmoe-1b-7b", "llava-next-34b", "zamba2-1.2b", "rwkv6-7b",
+              "deepseek-v2-236b", "yi-6b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_rows(dirpath: str) -> List[Dict]:
+    rows = []
+    for f in sorted(Path(dirpath).glob("*.json")):
+        try:
+            rows.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    key = {(a, s): i * 10 + j for i, a in enumerate(ARCH_ORDER)
+           for j, s in enumerate(SHAPE_ORDER)}
+    rows.sort(key=lambda r: (key.get((r.get("arch"), r.get("shape")), 999),
+                             r.get("mesh", "")))
+    return rows
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def to_markdown_multipod(rows: List[Dict]) -> str:
+    """Multi-pod pass: production compile only (memory + pass evidence)."""
+    lines = ["| arch | shape | mesh | compiled | mem GiB | collectives seen |",
+             "|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != "2x16x16":
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP "
+                         f"| - | {r['skipped'][:48]} |")
+            continue
+        colls = ", ".join(sorted(r.get("collectives", {})))
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | yes "
+                     f"| {r.get('peak_memory_gib', 0):.1f} | {colls} |")
+    return "\n".join(lines)
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "bottleneck | useful_flops | mem GiB | note |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("mesh") == "2x16x16":
+            continue                      # multi-pod: see to_markdown_multipod
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| - | - | - | - | - | - | SKIP: {r['skipped'][:40]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {fmt_s(r.get('t_compute_s'))} | {fmt_s(r.get('t_memory_s'))} "
+            f"| {fmt_s(r.get('t_collective_s'))} | {r.get('bottleneck', '?')} "
+            f"| {r.get('useful_flops_frac', 0):.2f} "
+            f"| {r.get('peak_memory_gib', 0):.1f} "
+            f"| mb={r.get('microbatches', 1)}"
+            f"{' ' + '+'.join(r.get('opts', [])) if r.get('opts') else ''} |")
+    return "\n".join(lines)
+
+
+def to_csv(rows: List[Dict]) -> str:
+    cols = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+            "t_collective_s", "bottleneck", "useful_flops_frac",
+            "peak_memory_gib", "collective_bytes_per_chip", "microbatches"]
+    out = [",".join(cols)]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"{r['arch']},{r['shape']},{r['mesh']},"
+                       + "," * 7 + "SKIP")
+            continue
+        out.append(",".join(str(r.get(c, "")) for c in cols))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--format", default="md", choices=["md", "csv"])
+    args = ap.parse_args()
+    rows = load_rows(args.dir)
+    print(to_markdown(rows) if args.format == "md" else to_csv(rows))
+
+
+if __name__ == "__main__":
+    main()

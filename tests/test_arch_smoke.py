@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests: reduced variant of each assigned arch runs
+one forward/train step on CPU; asserts output shapes + no NaNs (deliverable f).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Model
+
+
+def _batch(cfg, key, B=2, S=32):
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S + 1), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            ks[1], (B, cfg.encdec.encoder_seq, cfg.d_model))
+    if cfg.frontend.kind == "vision":
+        batch["patch_embeddings"] = jax.random.normal(
+            ks[2], (B, cfg.frontend.num_embeddings, cfg.frontend.embed_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    m = Model(cfg)
+    state = m.init_state(jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+    state2, metrics = jax.jit(m.train_step)(state, batch)
+    for k, v in metrics.items():
+        assert not bool(jnp.isnan(v).any()), f"{arch} metric {k} is NaN"
+    assert float(metrics["ce"]) > 0
+    # params actually changed
+    before = jax.tree_util.tree_leaves(state["params"])[0]
+    after = jax.tree_util.tree_leaves(state2["params"])[0]
+    assert state2["step"] == 1
+    assert not jnp.allclose(before, after) or before.size < 8
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    B = 2
+    caches = m.init_caches(B, 64)
+    batch = {"tokens": jnp.zeros((B, 1), jnp.int32), "position": jnp.int32(0)}
+    if cfg.family == "encdec":
+        batch["enc"] = jax.random.normal(
+            jax.random.key(2), (B, cfg.encdec.encoder_seq, cfg.d_model))
+    logits, caches = jax.jit(m.decode_step)(params, caches, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "rwkv6-7b", "zamba2-1.2b",
+                                  "deepseek-v2-236b"])
+def test_prefill_decode_consistency(arch):
+    """Greedy continuation after prefill matches teacher-forced logits."""
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:
+        # dropless capacity: capacity-based token dropping is train-path
+        # semantics, not a bug, but it breaks exact train/decode equivalence
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.key(1), (B, S), 1, cfg.vocab_size)
+
+    # full forward logits at the last position
+    from repro.models import transformer as tf
+    h, _, _ = tf.forward(params, cfg, {"tokens": toks}, mode="train")
+    full_logits = tf.logits_from_hidden(params, cfg, h)[:, -1]
+
+    # decode token-by-token from empty cache
+    caches = m.init_caches(B, 16)
+    for t in range(S):
+        logits, caches = m.decode_step(
+            params, caches, {"tokens": toks[:, t:t + 1],
+                             "position": jnp.int32(t)})
+    assert jnp.allclose(full_logits, logits, atol=2e-2, rtol=2e-2), (
+        float(jnp.abs(full_logits - logits).max()))
+
+
+def test_full_configs_match_assignment():
+    """The full (non-reduced) configs carry the exact assigned dimensions."""
+    expect = {
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        c = get_config(arch)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, h, kv, ff, v), arch
+    assert get_config("olmoe-1b-7b").moe.num_experts == 64
+    assert get_config("olmoe-1b-7b").moe.top_k == 8
+    assert get_config("deepseek-v2-236b").moe.num_experts == 160
+    assert get_config("deepseek-v2-236b").moe.top_k == 6
+    assert get_config("deepseek-v2-236b").mla.kv_lora_rank == 512
+    assert get_config("zamba2-1.2b").ssm.state_dim == 64

@@ -1,0 +1,157 @@
+"""Core-library tests: connectivity semantics, OFENet, effective rank,
+loss-landscape utility — the paper's §3 building blocks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CONNECTIVITIES, MLPBlockConfig, OFENetConfig,
+                        aux_loss, effective_rank, mlp_block_apply,
+                        mlp_block_init, ofenet_init, target_update)
+from repro.core.loss_landscape import loss_surface, random_direction, sharpness
+
+
+def test_densenet_feature_dim_matches_paper_table2():
+    """Paper Table 2: OFENet z_s path on Ant (111-dim state): 8 layers of 256
+    growth -> 2159-dim feature; parameter counts match."""
+    cfg = OFENetConfig(state_dim=111, action_dim=8, num_layers=8,
+                       num_units=256)
+    assert cfg.state_feature_dim == 111 + 8 * 256   # 2159
+    assert cfg.sa_feature_dim == 2159 + 8 + 8 * 256  # 4215
+    # per-layer input dims of phi_s follow Table 2 column "input units"
+    assert cfg.state_block.layer_in_dims() == (111, 367, 623, 879, 1135,
+                                               1391, 1647, 1903)
+
+
+def test_connectivity_shapes_and_variety():
+    x = jnp.ones((3, 16))
+    outs = {}
+    for conn in CONNECTIVITIES:
+        cfg = MLPBlockConfig(in_dim=16, num_layers=3, num_units=8,
+                             connectivity=conn, out_dim=4)
+        p = mlp_block_init(jax.random.key(0), cfg)
+        out, feat, _ = mlp_block_apply(p, cfg, x)
+        assert out.shape == (3, 4)
+        assert feat.shape[-1] == cfg.feature_dim
+        outs[conn] = out
+    # different connectivities genuinely compute different functions
+    assert not jnp.allclose(outs["densenet"], outs["mlp"])
+    assert not jnp.allclose(outs["d2rl"], outs["resnet"])
+
+
+def test_densenet_concat_semantics():
+    """y_i = f_i([y_0..y_{i-1}]): zeroing layer-0's weights must change the
+    INPUT of every later layer (stream concat), unlike plain MLP."""
+    cfg = MLPBlockConfig(in_dim=4, num_layers=2, num_units=4,
+                         connectivity="densenet")
+    p = mlp_block_init(jax.random.key(1), cfg)
+    x = jnp.ones((2, 4))
+    _, feat, _ = mlp_block_apply(p, cfg, x)
+    # stream = [x, y0, y1]
+    assert feat.shape[-1] == 4 + 4 + 4
+    np.testing.assert_array_equal(np.asarray(feat[:, :4]), np.ones((2, 4)))
+
+
+def test_batchnorm_running_stats_update():
+    cfg = MLPBlockConfig(in_dim=4, num_layers=1, num_units=8,
+                         connectivity="mlp", batch_norm=True)
+    p = mlp_block_init(jax.random.key(0), cfg)
+    x = 5.0 + jax.random.normal(jax.random.key(1), (64, 4))
+    _, _, p2 = mlp_block_apply(p, cfg, x, train=True)
+    assert not jnp.allclose(p2["layers"][0]["bn"]["mean"],
+                            p["layers"][0]["bn"]["mean"])
+    # eval mode does not change stats
+    _, _, p3 = mlp_block_apply(p2, cfg, x, train=False)
+    np.testing.assert_array_equal(np.asarray(p3["layers"][0]["bn"]["mean"]),
+                                  np.asarray(p2["layers"][0]["bn"]["mean"]))
+
+
+def test_ofenet_aux_loss_decreases():
+    """Training the aux objective on a fixed deterministic system converges."""
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+    cfg = OFENetConfig(state_dim=6, action_dim=2, num_layers=2, num_units=16,
+                       batch_norm=False)
+    params = ofenet_init(jax.random.key(0), cfg)
+    key = jax.random.key(1)
+    a_mat = jax.random.normal(jax.random.key(2), (6, 6)) * 0.3
+    b_mat = jax.random.normal(jax.random.key(3), (2, 6)) * 0.3
+    opt = adamw_init(params["online"])
+    ocfg = AdamWConfig(lr=1e-3)
+
+    @jax.jit
+    def step(params, opt, key):
+        s = jax.random.normal(key, (64, 6))
+        a = jax.random.normal(jax.random.fold_in(key, 1), (64, 2))
+        s2 = s @ a_mat + a @ b_mat
+        (l, _), g = jax.value_and_grad(
+            lambda on: aux_loss({**params, "online": on}, cfg, s, a, s2),
+            has_aux=True)(params["online"])
+        new_online, opt2 = adamw_update(ocfg, g, opt, params["online"])
+        return {**params, "online": new_online}, opt2, l
+
+    losses = []
+    for i in range(60):
+        key = jax.random.fold_in(key, i)
+        params, opt, l = step(params, opt, key)
+        losses.append(float(l))
+    assert losses[-1] < 0.5 * losses[0], losses[::20]
+
+
+def test_ofenet_target_update_moves_towards_online():
+    cfg = OFENetConfig(state_dim=4, action_dim=2, num_layers=1, num_units=8)
+    params = ofenet_init(jax.random.key(0), cfg)
+    # perturb online
+    params = {**params, "online": jax.tree_util.tree_map(
+        lambda x: x + 1.0, params["online"])}
+    p2 = target_update(params, cfg)
+    leaf_t = jax.tree_util.tree_leaves(p2["target"])[0]
+    leaf_t0 = jax.tree_util.tree_leaves(params["target"])[0]
+    leaf_o = jax.tree_util.tree_leaves(params["online"])[0]
+    expected = 0.005 * leaf_o + 0.995 * leaf_t0
+    np.testing.assert_allclose(np.asarray(leaf_t), np.asarray(expected),
+                               rtol=1e-6)
+
+
+@given(st.integers(min_value=1, max_value=8))
+@settings(max_examples=10, deadline=None)
+def test_effective_rank_of_known_rank_matrix(r):
+    """srank of an exactly rank-r matrix (well-conditioned factors) is r."""
+    rng = np.random.default_rng(r)
+    u, _ = np.linalg.qr(rng.normal(size=(64, r)))
+    v, _ = np.linalg.qr(rng.normal(size=(32, r)))
+    m = u @ v.T
+    assert int(effective_rank(jnp.array(m), delta=0.01)) == r
+
+
+def test_effective_rank_monotone_in_delta():
+    m = jnp.array(np.random.default_rng(0).normal(size=(64, 32)))
+    r1 = int(effective_rank(m, 0.1))
+    r2 = int(effective_rank(m, 0.01))
+    assert r1 <= r2 <= 32
+
+
+def test_loss_surface_quadratic_is_quadratic():
+    """A quadratic loss restricted to any 2-D slice stays exactly quadratic
+    (filter-normalized directions are fixed linear combinations)."""
+    params = {"w": jnp.ones((8, 8))}
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+    a, b, surf = loss_surface(loss, params, jax.random.key(0),
+                              span=0.5, resolution=7)
+    assert surf.shape == (7, 7) and np.isfinite(surf).all()
+    # quadratic along each axis: 2nd-order fit residual ~ 0, curvature >= 0
+    for row in (surf[3, :], surf[:, 3]):
+        coef = np.polyfit(a, row, 2)
+        fit = np.polyval(coef, a)
+        assert np.max(np.abs(fit - row)) < 1e-3 * max(1.0, row.max())
+        assert coef[0] >= 0
+
+
+def test_random_direction_filter_normalized():
+    params = {"w": 3.0 * jnp.ones((4, 5)), "b": jnp.ones((5,))}
+    d = random_direction(jax.random.key(0), params)
+    # per-output-filter norms match the parameter's
+    dn = np.linalg.norm(np.asarray(d["w"]), axis=0)
+    pn = np.linalg.norm(np.asarray(params["w"]), axis=0)
+    np.testing.assert_allclose(dn, pn, rtol=1e-4)

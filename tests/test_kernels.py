@@ -1,0 +1,162 @@
+"""Per-kernel allclose sweeps vs the pure-jnp/numpy oracles (interpret mode).
+
+Every kernel is swept over shapes AND dtypes per the deliverable; blocks are
+deliberately smaller than the arrays so the grid logic is exercised.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dense_block.dense_block import fused_dense
+from repro.kernels.dense_block.ops import dense_concat_matmul, fused_dense_padded
+from repro.kernels.dense_block.ref import dense_concat_matmul_ref, fused_dense_ref
+from repro.kernels.flash_attention.ops import gqa_flash
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd_chunked_kernel
+from repro.kernels.ssd_scan.ssd_scan import ssd_chunk_dual
+from repro.kernels.ssd_scan.ref import ssd_chunk_dual_ref
+from repro.models.ssm import ssd_chunked
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- dense_block
+
+@pytest.mark.parametrize("m,k,n", [(16, 32, 16), (64, 128, 32), (128, 256, 128),
+                                   (32, 96, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("activation", ["swish", "identity"])
+def test_fused_dense_matches_ref(m, k, n, dtype, activation):
+    ks = jax.random.split(jax.random.key(0), 3)
+    x = jax.random.normal(ks[0], (m, k), dtype)
+    w = jax.random.normal(ks[1], (k, n), dtype) * 0.1
+    b = jax.random.normal(ks[2], (n,), dtype)
+    out = fused_dense_padded(x, w, b, activation=activation,
+                             bm=16, bn=16, bk=16)
+    ref = fused_dense_ref(x, w, b, activation)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("widths", [(8, 16), (24, 16, 40), (128,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dense_concat_matmul_densenet_layer(widths, dtype):
+    """The paper's DenseNet layer: concat never materializes."""
+    key = jax.random.key(1)
+    parts = [jax.random.normal(jax.random.fold_in(key, i), (32, wd), dtype)
+             for i, wd in enumerate(widths)]
+    k = sum(widths)
+    w = jax.random.normal(jax.random.fold_in(key, 99), (k, 48), dtype) * 0.1
+    b = jnp.zeros((48,), dtype)
+    out = dense_concat_matmul(parts, w, b, activation="swish")
+    ref = dense_concat_matmul_ref(parts, w, b, "swish")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_fused_dense_exact_blocks():
+    """No-padding path with multiple K blocks (accumulator reuse)."""
+    x = jax.random.normal(jax.random.key(2), (128, 384))
+    w = jax.random.normal(jax.random.key(3), (384, 128)) * 0.05
+    out = fused_dense(x, w, None, activation="swish", bm=64, bn=64, bk=128)
+    ref = fused_dense_ref(x, w, None, "swish")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------ flash_attention
+
+@pytest.mark.parametrize("sq,skv,d,bq,bkv", [
+    (128, 128, 32, 64, 64), (256, 256, 64, 64, 128), (128, 256, 16, 128, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(sq, skv, d, bq, bkv, dtype, causal):
+    ks = jax.random.split(jax.random.key(4), 3)
+    q = jax.random.normal(ks[0], (3, sq, d), dtype)
+    k = jax.random.normal(ks[1], (3, skv, d), dtype)
+    v = jax.random.normal(ks[2], (3, skv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=bq, bkv=bkv)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (2, 128, 32))
+    k = jax.random.normal(ks[1], (2, 128, 32))
+    v = jax.random.normal(ks[2], (2, 128, 32))
+    out = flash_attention(q, k, v, causal=True, window=window, bq=32, bkv=32)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_softcap_gemma2():
+    ks = jax.random.split(jax.random.key(6), 3)
+    q = jax.random.normal(ks[0], (2, 64, 32)) * 3
+    k = jax.random.normal(ks[1], (2, 64, 32)) * 3
+    v = jax.random.normal(ks[2], (2, 64, 32))
+    out = flash_attention(q, k, v, causal=True, softcap=50.0, bq=32, bkv=32)
+    ref = attention_ref(q, k, v, causal=True, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_gqa_flash_wrapper_matches_model_attention():
+    from repro.models.attention import plain_attention
+    ks = jax.random.split(jax.random.key(7), 3)
+    B, S, H, KV, hd = 2, 128, 8, 2, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out = gqa_flash(q, k, v, causal=True, bq=64, bkv=64)
+    ref = plain_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------- ssd_scan
+
+@pytest.mark.parametrize("g,h,q,n,p", [(2, 2, 16, 8, 8), (1, 3, 32, 16, 8),
+                                       (4, 1, 8, 4, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_chunk_dual_matches_ref(g, h, q, n, p, dtype):
+    ks = jax.random.split(jax.random.key(8), 7)
+    c = jax.random.normal(ks[0], (g, q, n), dtype)
+    b = jax.random.normal(ks[1], (g, q, n), dtype)
+    x = jax.random.normal(ks[2], (g, h, q, p), dtype)
+    lg = -jax.nn.softplus(jax.random.normal(ks[3], (g, h, q)))
+    cum = jnp.cumsum(lg, axis=-1)
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (g, h, q)))
+    state = jax.random.normal(ks[5], (g, h, p, n), jnp.float32)
+    dskip = jax.random.normal(ks[6], (h,), jnp.float32)
+    out = ssd_chunk_dual(c, b, x, cum, dt, state, dskip)
+    ref = ssd_chunk_dual_ref(c, b, x, cum, dt, state, dskip)
+    np.testing.assert_allclose(np.asarray(out, np.float32), ref, **_tol(dtype))
+
+
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_ssd_chunked_kernel_matches_models_ssm(chunk):
+    """Kernel pipeline == the model's pure-jnp ssd_chunked (+ D skip)."""
+    ks = jax.random.split(jax.random.key(9), 6)
+    B, S, H, P, N = 2, 32, 2, 8, 4
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    b = jax.random.normal(ks[1], (B, S, N))
+    c = jax.random.normal(ks[2], (B, S, N))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    log_a = jax.random.normal(ks[4], (H,)) * 0.3
+    d_skip = jax.random.normal(ks[5], (H,))
+    y_k, f_k = ssd_chunked_kernel(x, b, c, dt, log_a, d_skip, chunk=chunk)
+    y_m, f_m = ssd_chunked(x, b, c, dt, log_a, chunk=chunk)
+    y_m = y_m + d_skip[None, None, :, None] * x
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_m),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,49 @@
+"""Launcher-level integration: train.py improves CE; serve.py generates;
+checkpoint round-trips through the train CLI; paper-technique LM flags work."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ENV = {**os.environ, "PYTHONPATH": "src"}
+
+
+def _run(args, timeout=900):
+    r = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                       text=True, timeout=timeout, env=ENV, cwd=".")
+    assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-3000:])
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_train_launcher_improves_ce(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "tinyllama-1.1b", "--reduced",
+                "--steps", "40", "--batch", "8", "--seq", "64",
+                "--ckpt", str(tmp_path / "ck.npz")])
+    stats = json.loads(out.strip().splitlines()[-1])
+    assert stats["improved"], stats
+    assert (tmp_path / "ck.npz").exists()
+    meta = json.loads((tmp_path / "ck.npz.meta.json").read_text())
+    assert meta["arch"] == "tinyllama-1.1b"
+
+
+@pytest.mark.slow
+def test_train_launcher_densenet_ffn_and_aux_head():
+    """The paper's technique as LM options: DenseNet-FFN + OFENet-style aux."""
+    out = _run(["repro.launch.train", "--arch", "yi-6b", "--reduced",
+                "--steps", "30", "--batch", "4", "--seq", "64",
+                "--connectivity", "densenet", "--aux-head"])
+    stats = json.loads(out.strip().splitlines()[-1])
+    assert stats["improved"], stats
+    assert "aux=" in out
+
+
+@pytest.mark.slow
+def test_serve_launcher_generates():
+    out = _run(["repro.launch.serve", "--arch", "zamba2-1.2b", "--reduced",
+                "--batch", "2", "--prompt-len", "4", "--gen", "8"])
+    stats = json.loads(out.strip().splitlines()[-1])
+    assert stats["gen"] == 8 and stats["tokens_per_s"] > 0

@@ -1,0 +1,110 @@
+"""Property-based tests (hypothesis) for the prioritized replay sum-tree."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.rl.replay import PrioritizedReplay, SumTree, UniformReplay
+
+
+@given(st.integers(min_value=1, max_value=500),
+       st.lists(st.floats(min_value=0.01, max_value=100.0),
+                min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_sumtree_total_invariant(capacity, values):
+    """Root always equals the sum of leaves after arbitrary updates."""
+    tree = SumTree(capacity)
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, capacity, size=len(values))
+    # apply sequentially so duplicate indices have well-defined last-write
+    for i, v in zip(idx, values):
+        tree.set(np.array([i]), np.array([v]))
+    leaves = tree.tree[tree.size // 2: tree.size // 2 + capacity]
+    assert np.isclose(tree.total, leaves.sum(), rtol=1e-9)
+
+
+@given(st.integers(min_value=2, max_value=200))
+@settings(max_examples=30, deadline=None)
+def test_sumtree_sample_respects_mass(capacity):
+    """A leaf with zero priority is never sampled; positive leaves are."""
+    tree = SumTree(capacity)
+    rng = np.random.default_rng(1)
+    pr = rng.uniform(0.0, 1.0, capacity)
+    pr[rng.integers(0, capacity, capacity // 2)] = 0.0
+    tree.set(np.arange(capacity), pr)
+    if tree.total == 0:
+        return
+    targets = rng.uniform(0, tree.total, size=256) * (1 - 1e-12)
+    leaves = tree.sample(targets)
+    assert (leaves >= 0).all() and (leaves < capacity).all()
+    assert (pr[leaves] > 0).all()
+
+
+def test_sumtree_sampling_proportional():
+    """Empirical sampling frequency tracks priorities."""
+    tree = SumTree(4)
+    tree.set(np.arange(4), np.array([1.0, 2.0, 3.0, 4.0]))
+    rng = np.random.default_rng(2)
+    targets = rng.uniform(0, tree.total, size=200_000)
+    counts = np.bincount(tree.sample(targets), minlength=4)
+    freq = counts / counts.sum()
+    np.testing.assert_allclose(freq, np.array([1, 2, 3, 4]) / 10, atol=0.01)
+
+
+def _mk_batch(n, obs_dim=3, act_dim=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"obs": rng.normal(size=(n, obs_dim)).astype(np.float32),
+            "act": rng.normal(size=(n, act_dim)).astype(np.float32),
+            "rew": rng.normal(size=(n,)).astype(np.float32),
+            "next_obs": rng.normal(size=(n, obs_dim)).astype(np.float32),
+            "done": rng.integers(0, 2, size=(n,)).astype(np.float32)}
+
+
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=16, max_value=128))
+@settings(max_examples=20, deadline=None)
+def test_replay_roundtrip(n_add, capacity):
+    buf = PrioritizedReplay(capacity, 3, 2)
+    batch = _mk_batch(n_add)
+    buf.add_batch(batch)
+    assert len(buf) == min(n_add, capacity)
+    rng = np.random.default_rng(3)
+    out, idx, w = buf.sample(8, rng)
+    assert out["obs"].shape == (8, 3)
+    assert (w > 0).all() and (w <= 1.0 + 1e-6).all()
+    buf.update_priorities(idx, np.abs(rng.normal(size=8)))
+    out2, idx2, w2 = buf.sample(8, rng)
+    assert np.isfinite(out2["rew"]).all()
+
+
+def test_replay_wraparound_overwrites_oldest():
+    buf = PrioritizedReplay(8, 3, 2)
+    b1 = _mk_batch(8, seed=1)
+    buf.add_batch(b1)
+    b2 = _mk_batch(4, seed=2)
+    buf.add_batch(b2)
+    assert len(buf) == 8
+    np.testing.assert_array_equal(buf.data["obs"][:4], b2["obs"])
+    np.testing.assert_array_equal(buf.data["obs"][4:], b1["obs"][4:])
+
+
+def test_prioritized_focuses_high_td():
+    """High-priority transitions are sampled far more often."""
+    buf = PrioritizedReplay(100, 3, 2, alpha=1.0)
+    buf.add_batch(_mk_batch(100))
+    pr = np.full(100, 1e-3)
+    pr[7] = 10.0
+    buf.update_priorities(np.arange(100), pr)
+    rng = np.random.default_rng(4)
+    hits = 0
+    for _ in range(50):
+        _, idx, _ = buf.sample(16, rng)
+        hits += (idx == 7).sum()
+    assert hits > 200      # ~>25% of 800 draws go to the hot index
+
+
+def test_uniform_replay_is_uniform():
+    buf = UniformReplay(64, 3, 2)
+    buf.add_batch(_mk_batch(64))
+    rng = np.random.default_rng(5)
+    _, idx, w = buf.sample(32, rng)
+    assert (w == 1.0).all()

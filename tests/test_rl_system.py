@@ -1,0 +1,126 @@
+"""RL substrate behaviour tests: envs, SAC/TD3 updates, Ape-X collection,
+and (slow) end-to-end learning on pendulum."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ofenet import OFENetConfig
+from repro.rl import apex, make_env
+from repro.rl.envs import ENVS, rollout_return
+from repro.rl.runner import RunConfig, run_training
+from repro.rl.sac import SACConfig, sac_init, sac_update, sample_action
+from repro.rl.td3 import TD3Config, policy, td3_init, td3_update
+
+
+@pytest.mark.parametrize("name", sorted(ENVS))
+def test_env_step_shapes_and_finiteness(name):
+    env = make_env(name)
+    s = env.reset(jax.random.key(0))
+    obs = env.obs(s)
+    assert obs.shape == (env.obs_dim,)
+    for t in range(20):
+        a = jnp.sin(jnp.arange(env.act_dim, dtype=jnp.float32) + t)
+        s, obs, r, done = env.step(s, a)
+        assert jnp.isfinite(obs).all() and jnp.isfinite(r)
+    assert int(s.t) == 20
+
+
+@pytest.mark.parametrize("name", sorted(ENVS))
+def test_env_vmap_rollout(name):
+    env = make_env(name)
+    states = apex.init_actor_states(env, jax.random.key(0), 4)
+    rand = apex.random_policy(env.act_dim)
+    states, trs = apex.collect(env, rand, {}, states, 5, jax.random.key(1))
+    assert trs["obs"].shape == (20, env.obs_dim)
+    assert np.isfinite(np.asarray(trs["rew"])).all()
+
+
+def _fake_batch(obs_dim, act_dim, n=32, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    return {"obs": jax.random.normal(ks[0], (n, obs_dim)),
+            "act": jnp.tanh(jax.random.normal(ks[1], (n, act_dim))),
+            "rew": jax.random.normal(ks[2], (n,)),
+            "next_obs": jax.random.normal(ks[3], (n, obs_dim)),
+            "done": jnp.zeros((n,))}
+
+
+@pytest.mark.parametrize("conn", ["mlp", "resnet", "densenet", "d2rl"])
+def test_sac_update_all_connectivities(conn):
+    cfg = SACConfig(obs_dim=5, act_dim=2, num_units=16, connectivity=conn,
+                    ofenet=OFENetConfig(state_dim=5, action_dim=2,
+                                        num_layers=2, num_units=8,
+                                        batch_norm=False))
+    state = sac_init(jax.random.key(0), cfg)
+    batch = _fake_batch(5, 2)
+    state2, metrics = jax.jit(lambda s, b, k: sac_update(s, cfg, b, k))(
+        state, batch, jax.random.key(1))
+    for k in ("critic_loss", "actor_loss", "aux_loss", "td_error"):
+        assert np.isfinite(float(metrics[k])), k
+    assert metrics["priorities"].shape == (32,)
+    assert metrics["q_features"].ndim == 2
+    # targets moved slightly towards online critics
+    t0 = jax.tree_util.tree_leaves(state["params"]["target_critics"])[0]
+    t1 = jax.tree_util.tree_leaves(state2["params"]["target_critics"])[0]
+    assert not np.allclose(np.asarray(t0), np.asarray(t1))
+
+
+def test_td3_delayed_policy_update():
+    cfg = TD3Config(obs_dim=4, act_dim=2, num_units=16, ofenet=None,
+                    policy_delay=2)
+    state = td3_init(jax.random.key(0), cfg)
+    batch = _fake_batch(4, 2)
+    upd = jax.jit(lambda s, b, k: td3_update(s, cfg, b, k))
+    # step counter 0 -> policy updates; step 1 -> frozen
+    s1, _ = upd(state, batch, jax.random.key(1))
+    a0 = jax.tree_util.tree_leaves(state["params"]["actor"])[0]
+    a1 = jax.tree_util.tree_leaves(s1["params"]["actor"])[0]
+    assert not np.allclose(np.asarray(a0), np.asarray(a1))
+    s2, _ = upd(s1, batch, jax.random.key(2))
+    a2 = jax.tree_util.tree_leaves(s2["params"]["actor"])[0]
+    # delayed: actor (and its opt state) frozen exactly on off-steps
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_sample_action_squashed():
+    cfg = SACConfig(obs_dim=3, act_dim=2, num_units=8, ofenet=None)
+    state = sac_init(jax.random.key(0), cfg)
+    a, logp = sample_action(state["params"], cfg,
+                            jax.random.normal(jax.random.key(1), (16, 3)),
+                            jax.random.key(2))
+    assert a.shape == (16, 2) and (jnp.abs(a) <= 1.0).all()
+    assert jnp.isfinite(logp).all()
+
+
+def test_collect_timeout_resets():
+    env = make_env("pendulum")          # 200-step limit
+    states = apex.init_actor_states(env, jax.random.key(0), 2)
+    rand = apex.random_policy(env.act_dim)
+    states, trs = apex.collect(env, rand, {}, states, 201, jax.random.key(1))
+    # after passing the limit every env restarted: t < 201
+    assert (np.asarray(states.t) < 201).all()
+    # timeouts bootstrapped: done stays 0 for pure time-limit envs
+    assert float(np.asarray(trs["done"]).max()) == 0.0
+
+
+@pytest.mark.slow
+def test_sac_learns_pendulum():
+    """End-to-end: distributed SAC+OFENet+DenseNet beats the random policy
+    decisively on pendulum within a small budget."""
+    cfg = RunConfig(env="pendulum", algo="sac", num_units=64, num_layers=2,
+                    ofenet_units=16, ofenet_layers=2, total_steps=1500,
+                    warmup_steps=300, eval_every=500, n_core=1, n_env=16,
+                    eval_episodes=3, seed=0)
+    res = run_training(cfg)
+    # random policy scores ~-1200 on pendulum; a learning agent is decisively
+    # above that within this budget (full convergence ~-200 needs ~10k steps)
+    assert res.max_return > -1000, res.returns
+
+
+def test_run_training_smoke_all_flags():
+    cfg = RunConfig(env="pointmass", algo="td3", num_units=16, num_layers=1,
+                    use_ofenet=False, distributed=False, prioritized=False,
+                    total_steps=30, warmup_steps=50, eval_every=30,
+                    batch_size=32, eval_episodes=1)
+    res = run_training(cfg)
+    assert len(res.returns) >= 1 and np.isfinite(res.returns[-1])
