@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.table1_final",
     "benchmarks.loss_landscape_bench",
     "benchmarks.kernels_micro",
+    "benchmarks.replay_micro",
     "benchmarks.lm_substrate",
 ]
 

@@ -1,0 +1,15 @@
+"""Repo-level pytest config: deterministic CPU runs without env plumbing.
+
+Must run before any test module imports jax: pin the platform to CPU (the
+suite validates Pallas kernels in interpret mode; accidental GPU/TPU pickup
+makes runs non-deterministic across runners) and make ``import repro`` work
+even when the caller forgot ``PYTHONPATH=src``.
+"""
+import os
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -3,7 +3,15 @@
 Runs Full / w/o Ape-X / w/o OFENet / w/o DenseNet / original-SAC on the same
 env+budget and prints the Fig.-10-style comparison table.
 
+``--replay device`` flips every variant onto the device-resident replay
+(``repro.replay``): actor collection and the replay add fuse into one jitted
+program and sampling/priority updates stay on device — same learning curves,
+no per-step host<->device transfer of the replay store. ``--replay-kernel
+pallas`` additionally routes the sum-tree through the Pallas descent kernel
+(interpret mode on CPU; see benchmarks/replay_micro.py for throughput).
+
     PYTHONPATH=src python examples/rl_distributed.py [--steps 800]
+        [--replay host|device] [--replay-kernel xla|pallas]
 """
 import argparse
 
@@ -24,12 +32,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=800)
     ap.add_argument("--env", default="pendulum")
+    ap.add_argument("--replay", default="host", choices=["host", "device"])
+    ap.add_argument("--replay-kernel", default="xla",
+                    choices=["xla", "pallas"])
     args = ap.parse_args()
     base = dict(env=args.env, algo="sac", num_units=128, num_layers=2,
                 connectivity="densenet", use_ofenet=True, ofenet_units=32,
                 ofenet_layers=2, distributed=True, n_core=2, n_env=16,
                 total_steps=args.steps, warmup_steps=300,
-                eval_every=args.steps // 2)
+                eval_every=args.steps // 2, replay_backend=args.replay,
+                replay_kernel=args.replay_kernel)
+    print(f"replay backend: {args.replay} ({args.replay_kernel})")
     print(f"{'variant':<14}{'max return':>12}{'params':>12}")
     for name, ov in VARIANTS.items():
         res = run_training(RunConfig(**{**base, **ov}))

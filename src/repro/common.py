@@ -105,3 +105,17 @@ def huber(x: jax.Array, delta: float = 1.0) -> jax.Array:
     """Elementwise Huber loss on residuals (paper A.1 uses it for Q-regression)."""
     a = jnp.abs(x)
     return jnp.where(a <= delta, 0.5 * x * x, delta * (a - 0.5 * delta))
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Version-portable shard_map with replication checking off.
+
+    ``jax.shard_map(check_vma=...)`` landed after the pinned jax; fall back
+    to ``jax.experimental.shard_map.shard_map(check_rep=False)`` there.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

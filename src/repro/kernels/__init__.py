@@ -1,4 +1,6 @@
 # Pallas TPU kernels for the compute hot spots (validated on CPU via
 # interpret=True): the paper's wide-DenseNet dense layer (fused
 # concat-matmul-swish), flash attention for the transformer substrate's
-# prefill path, and the Mamba2 SSD intra-chunk dual form.
+# prefill path, the Mamba2 SSD intra-chunk dual form, and the replay
+# sum-tree (fused proportional-descent sample + scatter/resum set) backing
+# the device-resident prioritized replay in repro.replay.

@@ -1,0 +1,71 @@
+"""Jit'd dispatch layer for the device sum-tree: Pallas kernel or XLA ref.
+
+``backend="pallas"`` runs the fused descent/scatter kernels from
+``replay_tree.py`` (interpret mode on CPU); ``backend="xla"`` runs the pure
+jnp oracle from ``ref.py`` — the same functions the tests use as ground
+truth, and the sensible default on CPU where interpret-mode Pallas is slow.
+``repro.replay`` calls only through this layer, so the replay subsystem is
+backend-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.replay_tree import ref
+from repro.kernels.replay_tree.replay_tree import tree_sample, tree_set
+
+BACKENDS = ("xla", "pallas")
+
+
+def sumtree_init(capacity: int) -> jax.Array:
+    """Zeroed flat tree: 2**depth float32 nodes, root at 1."""
+    return ref.tree_init_ref(capacity)
+
+
+def sumtree_total(tree: jax.Array) -> jax.Array:
+    return ref.tree_total_ref(tree)
+
+
+def sumtree_get(tree: jax.Array, idx: jax.Array) -> jax.Array:
+    return ref.tree_get_ref(tree, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def sumtree_set(tree: jax.Array, idx: jax.Array, value: jax.Array, *,
+                backend: str = "xla", interpret: bool = True) -> jax.Array:
+    """Write ``value`` at leaves ``idx`` and refresh ancestor sums.
+
+    The Pallas set kernel is interpret-mode only: its scatter does not lower
+    on Mosaic, so ``backend="pallas", interpret=False`` (real TPU) routes to
+    the XLA scatter fallback — sampling keeps the fused kernel either way.
+    """
+    assert backend in BACKENDS, backend
+    if backend == "pallas" and interpret:
+        return tree_set(tree, idx, value, interpret=True)
+    return ref.tree_set_ref(tree, idx, value)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "backend", "bt", "interpret"))
+def sumtree_sample(tree: jax.Array, targets: jax.Array, *, capacity: int,
+                   backend: str = "xla", bt: int = 128,
+                   interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Batch proportional descent -> (leaf_idx, leaf_priority).
+
+    Targets are padded up to a multiple of the kernel's batch tile ``bt``;
+    the pad lanes descend with target 0 and are sliced off.
+    """
+    assert backend in BACKENDS, backend
+    (b,) = targets.shape
+    if backend == "pallas":
+        pad = (-b) % bt
+        tp = jnp.pad(targets, (0, pad)) if pad else targets
+        leaf, pri = tree_sample(tree, tp, capacity=capacity, bt=bt,
+                                interpret=interpret)
+        return leaf[:b], pri[:b]
+    leaf = ref.tree_sample_ref(tree, targets, capacity=capacity)
+    return leaf, ref.tree_get_ref(tree, leaf)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the device sum-tree (and the XLA fallback path).
+
+Same layout as the host ``rl.replay.SumTree``: a flat array of ``2**depth``
+float32 nodes, root at index 1, leaves at ``size // 2 ..``; ``depth =
+ceil(log2(capacity)) + 1``. Everything here is jittable with static
+``capacity`` — these functions double as the ``backend="xla"`` implementation
+in ``ops.py`` (XLA scatter/gather lower well on TPU; the Pallas kernel fuses
+the descent into one VMEM-resident pass).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+def tree_depth(capacity: int) -> int:
+    """Levels incl. the leaf level (root is level 0, leaves level depth-1)."""
+    return int(np.ceil(np.log2(max(int(capacity), 2)))) + 1
+
+
+def tree_size(capacity: int) -> int:
+    return 1 << tree_depth(capacity)
+
+
+def tree_init_ref(capacity: int) -> jnp.ndarray:
+    return jnp.zeros((tree_size(capacity),), jnp.float32)
+
+
+def tree_total_ref(tree: jnp.ndarray) -> jnp.ndarray:
+    return tree[1]
+
+
+def tree_get_ref(tree: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    return tree[idx + tree.shape[0] // 2]
+
+
+def tree_set_ref(tree: jnp.ndarray, idx: jnp.ndarray,
+                 value: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized leaf update + bottom-up parent recompute.
+
+    Duplicate ``idx`` pick one of the written values (XLA scatter order is
+    unspecified; the host SumTree keeps the last). In the replay use both
+    duplicates carry the same priority — the same transition sampled twice
+    yields the same TD error — so the trees agree either way.
+    """
+    size = tree.shape[0]
+    depth = size.bit_length() - 1                # size == 2**depth
+    leaf = jnp.asarray(idx, jnp.int32) + size // 2
+    tree = tree.at[leaf].set(jnp.asarray(value, tree.dtype))
+    node = leaf // 2
+    for _ in range(depth - 1):                   # levels depth-2 .. 0 (root)
+        tree = tree.at[node].set(jnp.take(tree, 2 * node)
+                                 + jnp.take(tree, 2 * node + 1))
+        node = node // 2
+    return tree
+
+
+def tree_sample_ref(tree: jnp.ndarray, targets: jnp.ndarray, *,
+                    capacity: int) -> jnp.ndarray:
+    """Vectorized proportional descent; leaves clamped to [0, capacity)."""
+    node = jnp.ones(targets.shape, jnp.int32)
+    t = jnp.asarray(targets, jnp.float32)
+    for _ in range(tree.shape[0].bit_length() - 2):   # depth-1 descents
+        left = 2 * node
+        lmass = jnp.take(tree, left)
+        go_right = t >= lmass
+        t = jnp.where(go_right, t - lmass, t)
+        node = jnp.where(go_right, left + 1, left)
+    # target == total (or float drift in t - lmass) walks into the
+    # zero-priority padding tail — clamp exactly like the host SumTree
+    return jnp.clip(node - tree.shape[0] // 2, 0, capacity - 1)

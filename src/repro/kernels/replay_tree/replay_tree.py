@@ -1,0 +1,118 @@
+"""Pallas sum-tree kernels for device-resident prioritized replay.
+
+The Ape-X hot loop samples a batch of leaves by proportional descent every
+learner step.  ``tree_sample`` fuses the whole descent into one kernel: the
+tree lives in a VMEM-resident block, the batch of target masses is gridded
+into ``bt``-wide tiles, and each program unrolls the ``depth - 1`` levels of
+``gather -> compare -> subtract`` without ever writing intermediate node
+indices to HBM.  Leaf index AND leaf priority come back in the same pass, so
+the importance-weight computation needs no second gather round-trip.
+
+``tree_set`` is the write side: scatter a batch of leaf priorities and
+recompute the ancestor partial sums bottom-up, aliasing the tree in/out so
+the update is in-place.  Scatter does not lower on Mosaic today, so this
+kernel is the interpret-mode/CPU path — on TPU hardware ``ops.sumtree_set``
+defaults to the XLA scatter fallback (``ref.tree_set_ref``) while sampling
+keeps the fused Pallas path.
+
+Both kernels are validated in interpret mode against ``ref.py`` in
+tests/test_kernels.py, following the dense_block/ssd_scan layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sample_kernel(tree_ref, t_ref, leaf_ref, pri_ref, *, depth: int,
+                   capacity: int):
+    tree = tree_ref[0, :]
+    half = tree.shape[0] // 2
+    t = t_ref[0, :].astype(jnp.float32)
+    node = jnp.ones(t.shape, jnp.int32)
+    for _ in range(depth - 1):          # static unroll: root -> leaf level
+        left = 2 * node
+        lmass = jnp.take(tree, left)
+        go_right = t >= lmass
+        t = jnp.where(go_right, t - lmass, t)
+        node = jnp.where(go_right, left + 1, left)
+    # clamp into the valid leaf range (zero-priority padding tail)
+    leaf = jnp.clip(node - half, 0, capacity - 1)
+    leaf_ref[0, :] = leaf
+    pri_ref[0, :] = jnp.take(tree, leaf + half)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "bt", "interpret"))
+def tree_sample(tree: jax.Array, targets: jax.Array, *, capacity: int,
+                bt: int = 128, interpret: bool = True
+                ) -> tuple[jax.Array, jax.Array]:
+    """Proportional descent for a batch of target masses.
+
+    tree: (2**depth,) float32; targets: (B,) with B a multiple of ``bt``
+    (ops.py pads).  Returns (leaf_idx int32, leaf_priority f32), both (B,).
+    """
+    size = tree.shape[0]
+    depth = size.bit_length() - 1
+    (b,) = targets.shape
+    assert b % bt == 0, (b, bt)
+    leaf, pri = pl.pallas_call(
+        functools.partial(_sample_kernel, depth=depth, capacity=capacity),
+        grid=(b // bt,),
+        in_specs=[
+            pl.BlockSpec((1, size), lambda i: (0, 0)),
+            pl.BlockSpec((1, bt), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt), lambda i: (0, i)),
+            pl.BlockSpec((1, bt), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, b), jnp.int32),
+            jax.ShapeDtypeStruct((1, b), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tree.reshape(1, size), targets.reshape(1, b))
+    return leaf[0], pri[0]
+
+
+def _set_kernel(tree_ref, idx_ref, val_ref, out_ref, *, depth: int):
+    tree = tree_ref[0, :]
+    half = tree.shape[0] // 2
+    leaf = idx_ref[0, :] + half
+    tree = tree.at[leaf].set(val_ref[0, :].astype(tree.dtype))
+    node = leaf // 2
+    for _ in range(depth - 1):          # recompute levels depth-2 .. 0
+        tree = tree.at[node].set(jnp.take(tree, 2 * node)
+                                 + jnp.take(tree, 2 * node + 1))
+        node = node // 2
+    out_ref[0, :] = tree
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tree_set(tree: jax.Array, idx: jax.Array, value: jax.Array, *,
+             interpret: bool = True) -> jax.Array:
+    """Batch leaf write + ancestor resum; returns the updated tree.
+
+    The tree input is donated to the output (in-place update); duplicate
+    ``idx`` resolve to an unspecified writer, same caveat as the XLA ref.
+    """
+    size = tree.shape[0]
+    depth = size.bit_length() - 1
+    (n,) = idx.shape
+    return pl.pallas_call(
+        functools.partial(_set_kernel, depth=depth),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, size), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, size), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, size), tree.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(tree.reshape(1, size), idx.reshape(1, n).astype(jnp.int32),
+      value.reshape(1, n))[0]

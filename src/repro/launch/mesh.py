@@ -29,3 +29,10 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
     if multi_pod:
         return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def replay_shards(mesh) -> int:
+    """Device-replay shard count: one logical replay shard per ``data`` slice
+    (repro.replay.sharded, the Ape-X layout). Total replay capacity is the
+    per-shard capacity times this."""
+    return int(mesh.shape["data"])

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.common import (Params, PRNGKey, dense_init, get_activation,
-                          split_keys, swish)
+                          shard_map, split_keys, swish)
 from repro.core.blocks import MLPBlockConfig, mlp_block_apply, mlp_block_init
 from repro.models.config import ArchConfig
 
@@ -198,13 +198,12 @@ def moe_forward(p: Params, cfg: ArchConfig, x: jax.Array, *,
             lb = jax.lax.pmean(lb, axes)
             return out.reshape(xb.shape), lb
 
-        y, lb = jax.shard_map(
-            body, mesh=mesh,
+        y, lb = shard_map(
+            body, mesh,
             in_specs=(P(batch_axes, None, None), P(),
                       P("model", fsdp, None), P("model", fsdp, None),
                       P("model", None, fsdp)),
             out_specs=(P(batch_axes, None, None), P()),
-            check_vma=False,
         )(x, p["router"]["w"], p["gate"]["w"], p["up"]["w"], p["down"]["w"])
 
     if m.num_shared_experts:

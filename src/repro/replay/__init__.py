@@ -1,0 +1,45 @@
+"""Device-resident sharded prioritized replay (Ape-X on the mesh).
+
+The host replay in ``rl/replay.py`` round-trips every learner step:
+actor batches device -> host (NumPy sum-tree add), sampled batches
+host -> device (learner update). This subsystem keeps the whole
+``collect -> add -> sample -> update_priorities`` loop on device:
+
+* ``store``   — pure-JAX circular transition store: a pytree of
+  preallocated ``(capacity, ...)`` arrays plus an int32 cursor; functional
+  updates lower to in-place dynamic-update-slice under jit.
+* ``device``  — the prioritized replay itself. Sum-tree ops dispatch through
+  ``repro.kernels.replay_tree.ops`` to either the fused Pallas descent
+  kernel (``backend="pallas"``, interpret mode on CPU) or the XLA
+  scatter/gather reference (``backend="xla"``, the CPU-fast default).
+  Semantics mirror the host ``PrioritizedReplay`` (stratified proportional
+  sampling, alpha/beta exponents, batch-max-normalized IS weights), which
+  stays in-tree as the parity oracle.
+* ``sharded`` — one replay shard per mesh ``data``-axis slice, matching the
+  sharded actor pool in ``rl/apex.py``: adds are shard-local, sampling is
+  stratified across shards, IS weights renormalize via an on-mesh pmax, and
+  ``collect_and_add_sharded`` fuses actor stepping with the replay add into
+  a single ``shard_map`` program.
+
+Backend switch: ``rl.runner.RunConfig(replay_backend="host" | "device",
+replay_kernel="xla" | "pallas")``. With ``"device"`` the runner threads the
+functional ``ReplayState`` through jitted add/sample/update steps — no
+per-step host<->device transfer of the replay store (see
+examples/rl_distributed.py and benchmarks/replay_micro.py).
+"""
+from repro.replay.device import (DeviceReplay, DeviceReplayConfig,
+                                 ReplayState, replay_add, replay_init,
+                                 replay_sample, replay_update)
+from repro.replay.sharded import (collect_and_add_sharded,
+                                  sharded_replay_add, sharded_replay_init,
+                                  sharded_replay_sample,
+                                  sharded_replay_update)
+from repro.replay.store import store_add, store_gather, store_init
+
+__all__ = [
+    "DeviceReplay", "DeviceReplayConfig", "ReplayState",
+    "replay_add", "replay_init", "replay_sample", "replay_update",
+    "collect_and_add_sharded", "sharded_replay_add", "sharded_replay_init",
+    "sharded_replay_sample", "sharded_replay_update",
+    "store_add", "store_gather", "store_init",
+]

@@ -1,0 +1,147 @@
+"""Device-resident prioritized replay (functional core + OO wrapper).
+
+State is a pytree (``store`` + sum-tree + running max priority) and every
+operation is a pure jitted function with the frozen config as a static
+argument, so ``add -> sample -> update_priorities`` all stay on device — the
+host only ever sees the scalar metrics it asks for. Semantics mirror the
+host ``rl.replay.PrioritizedReplay`` (stratified proportional sampling,
+``(|p| + eps) ** alpha`` priorities, ``(N * p) ** -beta`` importance weights
+normalized by the batch max); the host buffer remains the parity oracle in
+tests/test_device_replay.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.replay_tree.ops import (sumtree_get, sumtree_init,
+                                           sumtree_sample, sumtree_set,
+                                           sumtree_total)
+from repro.replay.store import store_add, store_gather, store_init
+
+ReplayState = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceReplayConfig:
+    capacity: int
+    obs_dim: int
+    act_dim: int
+    alpha: float = 0.6
+    beta: float = 0.4
+    eps: float = 1e-6
+    uniform: bool = False        # ablation w/o prioritization
+    backend: str = "xla"         # sum-tree impl: "xla" | "pallas"
+    interpret: bool = True       # Pallas interpret mode (CPU validation)
+
+
+def replay_init(cfg: DeviceReplayConfig) -> ReplayState:
+    return {
+        "store": store_init(cfg.capacity, cfg.obs_dim, cfg.act_dim),
+        "tree": sumtree_init(cfg.capacity),
+        "max_priority": jnp.ones((), jnp.float32),
+    }
+
+
+def _tree_set(cfg: DeviceReplayConfig, tree, idx, value):
+    return sumtree_set(tree, idx, value, backend=cfg.backend,
+                       interpret=cfg.interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def replay_add(cfg: DeviceReplayConfig, state: ReplayState,
+               batch: Dict[str, jax.Array],
+               priorities: Optional[jax.Array] = None) -> ReplayState:
+    """Append an actor batch; new rows get max priority unless given."""
+    store, idx = store_add(state["store"], batch)
+    out = dict(state, store=store)
+    if cfg.uniform:
+        return out
+    if priorities is None:
+        pr = jnp.full(idx.shape, 1.0, jnp.float32) * state["max_priority"]
+    else:
+        if priorities.shape[0] > cfg.capacity:
+            # store_add kept only the last `capacity` rows — align
+            priorities = priorities[-cfg.capacity:]
+        pr = jnp.abs(priorities.astype(jnp.float32))
+    out["tree"] = _tree_set(cfg, state["tree"],
+                            idx, (pr + cfg.eps) ** cfg.alpha)
+    return out
+
+
+def _sample_raw(cfg: DeviceReplayConfig, state: ReplayState, key: jax.Array,
+                batch_size: int):
+    """Stratified sample; returns unnormalized IS weights (sharded replay
+    renormalizes by the *global* max across shards)."""
+    count = state["store"]["count"]
+    if cfg.uniform:
+        idx = jax.random.randint(key, (batch_size,), 0,
+                                 jnp.maximum(count, 1))
+        return store_gather(state["store"], idx), idx, \
+            jnp.ones((batch_size,), jnp.float32)
+    tree = state["tree"]
+    total = sumtree_total(tree)
+    u = jax.random.uniform(key, (batch_size,))
+    targets = (jnp.arange(batch_size, dtype=jnp.float32) + u) \
+        * (total / batch_size)
+    idx, _ = sumtree_sample(tree, targets, capacity=cfg.capacity,
+                            backend=cfg.backend, interpret=cfg.interpret)
+    idx = jnp.clip(idx, 0, jnp.maximum(count - 1, 0))
+    p = sumtree_get(tree, idx) / jnp.maximum(total, 1e-12)
+    w = (count * jnp.maximum(p, 1e-12)) ** (-cfg.beta)
+    return store_gather(state["store"], idx), idx, w.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "batch_size"))
+def replay_sample(cfg: DeviceReplayConfig, state: ReplayState,
+                  key: jax.Array, batch_size: int
+                  ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    """(batch, leaf idx, IS weights normalized by the batch max)."""
+    batch, idx, w = _sample_raw(cfg, state, key, batch_size)
+    return batch, idx, w / jnp.maximum(jnp.max(w), 1e-12)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def replay_update(cfg: DeviceReplayConfig, state: ReplayState,
+                  idx: jax.Array, priorities: jax.Array) -> ReplayState:
+    """Refresh sampled-batch priorities from the learner's TD errors."""
+    if cfg.uniform:
+        return state
+    pr = jnp.abs(priorities.astype(jnp.float32)) + cfg.eps
+    return dict(
+        state,
+        max_priority=jnp.maximum(state["max_priority"], jnp.max(pr)),
+        tree=_tree_set(cfg, state["tree"], idx, pr ** cfg.alpha),
+    )
+
+
+class DeviceReplay:
+    """Stateful convenience wrapper (benchmarks/tests); the runner threads
+    the functional state itself to keep the whole loop in one program."""
+
+    def __init__(self, cfg: DeviceReplayConfig):
+        self.cfg = cfg
+        self.state = replay_init(cfg)
+
+    def __len__(self) -> int:
+        return int(self.state["store"]["count"])
+
+    @property
+    def total(self) -> float:
+        return float(sumtree_total(self.state["tree"]))
+
+    def add_batch(self, batch, priorities=None) -> None:
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        pr = None if priorities is None else jnp.asarray(priorities)
+        self.state = replay_add(self.cfg, self.state, batch, pr)
+
+    def sample(self, batch_size: int, key: jax.Array):
+        return replay_sample(self.cfg, self.state, key, batch_size)
+
+    def update_priorities(self, idx, priorities) -> None:
+        self.state = replay_update(self.cfg, self.state, jnp.asarray(idx),
+                                   jnp.asarray(priorities))

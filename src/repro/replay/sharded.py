@@ -1,0 +1,131 @@
+"""Mesh-sharded device replay: one logical shard per ``data``-axis slice.
+
+TPU adaptation of Ape-X's per-actor replay shards (Horgan et al. 2018):
+actors already run sharded over the mesh ``data`` axis
+(``apex.collect_sharded``), so each shard keeps its *own* circular store and
+sum-tree and transitions never cross shards on add. Sampling is stratified
+across shards — every shard contributes ``batch_size / n_shards`` draws,
+proportional within its local tree — and importance weights are renormalized
+by the global max via an on-mesh ``pmax``, so the learner sees one coherent
+batch. ``collect_and_add_sharded`` fuses actor stepping and the replay add
+into a single ``shard_map`` program, mirroring ``apex.collect_sharded``.
+
+All entry points take the (mesh-stacked) state with a leading shard axis;
+leaves are placed with ``PartitionSpec("data")`` so each shard's arrays are
+resident on its own devices.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common import shard_map
+from repro.launch.mesh import replay_shards
+from repro.replay.device import (DeviceReplayConfig, ReplayState, _sample_raw,
+                                 replay_add, replay_init, replay_update)
+
+_SPEC = lambda _: P("data")
+
+
+def _local(state):
+    """Strip the length-1 shard axis shard_map hands each program."""
+    return jax.tree_util.tree_map(lambda x: x[0], state)
+
+
+def _stacked(state):
+    return jax.tree_util.tree_map(lambda x: x[None], state)
+
+
+def sharded_replay_init(cfg: DeviceReplayConfig, mesh) -> ReplayState:
+    """Per-shard states stacked on a leading ``data``-sharded axis.
+
+    ``cfg.capacity`` is the PER-SHARD capacity (total = capacity * n_data).
+    """
+    n = replay_shards(mesh)
+    state = jax.vmap(lambda _: replay_init(cfg))(jnp.arange(n))
+    return jax.device_put(
+        state, jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P("data")), state))
+
+
+def sharded_replay_add(cfg: DeviceReplayConfig, mesh, state: ReplayState,
+                       batch: Dict[str, jax.Array],
+                       priorities: Optional[jax.Array] = None) -> ReplayState:
+    """Each shard appends its slice of the (data-sharded) actor batch."""
+    def body(state, batch):
+        return _stacked(replay_add(cfg, _local(state), batch))
+
+    return shard_map(
+        body, mesh,
+        in_specs=(jax.tree_util.tree_map(_SPEC, state),
+                  jax.tree_util.tree_map(_SPEC, batch)),
+        out_specs=jax.tree_util.tree_map(_SPEC, state),
+    )(state, batch)
+
+
+def sharded_replay_sample(cfg: DeviceReplayConfig, mesh, state: ReplayState,
+                          key: jax.Array, batch_size: int
+                          ) -> Tuple[Dict[str, jax.Array], jax.Array,
+                                     jax.Array]:
+    """Stratified across shards: batch_size/n draws per shard, IS weights
+    normalized by the global (all-shard) max. Returned ``idx`` are
+    shard-local leaf indices, concatenated in shard order — feed them back
+    through ``sharded_replay_update`` with the same layout."""
+    n = replay_shards(mesh)
+    assert batch_size % n == 0, (batch_size, n)
+    bs = batch_size // n
+
+    def body(state, key):
+        k = jax.random.fold_in(key, jax.lax.axis_index("data"))
+        batch, idx, w = _sample_raw(cfg, _local(state), k, bs)
+        w = w / jnp.maximum(jax.lax.pmax(jnp.max(w), "data"), 1e-12)
+        return batch, idx, w
+
+    return shard_map(
+        body, mesh,
+        in_specs=(jax.tree_util.tree_map(_SPEC, state), P()),
+        out_specs=(jax.tree_util.tree_map(lambda _: P("data"), state["store"]
+                                          ["data"]), P("data"), P("data")),
+    )(state, key)
+
+
+def sharded_replay_update(cfg: DeviceReplayConfig, mesh, state: ReplayState,
+                          idx: jax.Array, priorities: jax.Array
+                          ) -> ReplayState:
+    def body(state, idx, pr):
+        return _stacked(replay_update(cfg, _local(state), idx, pr))
+
+    return shard_map(
+        body, mesh,
+        in_specs=(jax.tree_util.tree_map(_SPEC, state), P("data"), P("data")),
+        out_specs=jax.tree_util.tree_map(_SPEC, state),
+    )(state, idx, priorities)
+
+
+def collect_and_add_sharded(env, policy_sample, mesh,
+                            cfg: DeviceReplayConfig, params, states,
+                            steps: int, key, replay_state: ReplayState):
+    """One shard_map program: per-shard actor stepping + local replay add.
+
+    The sharded twin of ``apex.collect_sharded`` — transitions go straight
+    from the vectorized envs into the shard-local store without ever being
+    gathered, the Ape-X topology as a single device program.
+    """
+    from repro.rl import apex   # lazy: repro.rl.__init__ imports the runner
+
+    def body(params, states, key, rstate):
+        k = jax.random.fold_in(key, jax.lax.axis_index("data"))
+        states, trs = apex.collect(env, policy_sample, params, states,
+                                   steps, k)
+        return states, _stacked(replay_add(cfg, _local(rstate), trs))
+
+    return shard_map(
+        body, mesh,
+        in_specs=(P(), jax.tree_util.tree_map(_SPEC, states), P(),
+                  jax.tree_util.tree_map(_SPEC, replay_state)),
+        out_specs=(jax.tree_util.tree_map(_SPEC, states),
+                   jax.tree_util.tree_map(_SPEC, replay_state)),
+    )(params, states, key, replay_state)

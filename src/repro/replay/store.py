@@ -1,0 +1,62 @@
+"""Pure-JAX circular transition store.
+
+The device-resident mirror of the host buffers' ``data`` dict: a pytree of
+preallocated ``(capacity, ...)`` arrays plus int32 write cursor and live
+count. All operations are pure functions (old state in, new state out) so the
+whole Ape-X ``add -> sample -> update`` loop jits into one device program —
+under jit the functional update lowers to an in-place dynamic-update-slice,
+no reallocation and no host round-trip.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Store = Dict[str, jax.Array]   # {"data": {...}, "ptr": i32, "count": i32}
+
+
+def store_init(capacity: int, obs_dim: int, act_dim: int,
+               dtype=jnp.float32) -> Store:
+    c = int(capacity)
+    data = {
+        "obs": jnp.zeros((c, obs_dim), dtype),
+        "act": jnp.zeros((c, act_dim), dtype),
+        "rew": jnp.zeros((c,), dtype),
+        "next_obs": jnp.zeros((c, obs_dim), dtype),
+        "done": jnp.zeros((c,), dtype),
+    }
+    return {"data": data, "ptr": jnp.zeros((), jnp.int32),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def store_capacity(store: Store) -> int:
+    return store["data"]["rew"].shape[0]
+
+
+def store_add(store: Store, batch: Dict[str, jax.Array]
+              ) -> tuple[Store, jax.Array]:
+    """Append a transition batch at the cursor (wrapping); returns the
+    (new_store, written row indices)."""
+    cap = store_capacity(store)
+    n = batch["obs"].shape[0]
+    ptr = store["ptr"]
+    if n > cap:
+        # a batch that laps the buffer would scatter duplicate indices
+        # (unspecified winner in XLA) — keep only the last `cap` rows, the
+        # host buffer's sequential last-write-wins outcome
+        batch = {k: v[-cap:] for k, v in batch.items()}
+        ptr = ptr + (n - cap)
+    idx = (ptr + jnp.arange(min(n, cap), dtype=jnp.int32)) % cap
+    data = {k: v.at[idx].set(batch[k].astype(v.dtype))
+            for k, v in store["data"].items()}
+    return {
+        "data": data,
+        "ptr": ((store["ptr"] + n) % cap).astype(jnp.int32),
+        "count": jnp.minimum(store["count"] + n, cap).astype(jnp.int32),
+    }, idx
+
+
+def store_gather(store: Store, idx: jax.Array) -> Dict[str, jax.Array]:
+    return {k: v[idx] for k, v in store["data"].items()}

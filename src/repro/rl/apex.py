@@ -90,19 +90,36 @@ def collect_sharded(env: EnvSpec, policy_sample: Callable, mesh,
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.common import shard_map
+
     def body(params, states, key):
         key = jax.random.fold_in(key, jax.lax.axis_index("data"))
         return collect(env, policy_sample, params, states, steps, key)
 
-    n_data = mesh.shape["data"]
-    return jax.shard_map(
-        body, mesh=mesh,
+    return shard_map(
+        body, mesh,
         in_specs=(P(), jax.tree_util.tree_map(lambda _: P("data"), states),
                   P()),
         out_specs=(jax.tree_util.tree_map(lambda _: P("data"), states),
                    P("data")),
-        check_vma=False,
     )(params, states, key)
+
+
+def collect_into(env: EnvSpec, policy_sample: Callable, add_fn: Callable):
+    """Fuse actor collection with a device-replay add into ONE jitted step.
+
+    ``add_fn(replay_state, transitions) -> replay_state`` is the functional
+    add of ``repro.replay`` (config already bound). The returned
+    ``step(params, states, key, steps, replay_state)`` keeps transitions on
+    device end to end — the Ape-X collect+add half of the loop as a single
+    program (its sharded twin is ``replay.collect_and_add_sharded``).
+    """
+    @partial(jax.jit, static_argnums=(3,))
+    def step(params: Params, states: EnvState, key: PRNGKey, steps: int,
+             replay_state):
+        states, trs = collect(env, policy_sample, params, states, steps, key)
+        return states, add_fn(replay_state, trs)
+    return step
 
 
 def random_policy(act_dim: int):

@@ -59,7 +59,9 @@ class SumTree:
             go_right = t >= lmass
             t = np.where(go_right, t - lmass, t)
             node = np.where(go_right, left + 1, left)
-        return node - self.size // 2
+        # a target == total (or accumulated float error in the descent) can
+        # walk past the last positive leaf into the zero-padded tail
+        return np.clip(node - self.size // 2, 0, self.capacity - 1)
 
 
 @dataclasses.dataclass

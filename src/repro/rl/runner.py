@@ -9,11 +9,18 @@ paper ablation is reachable through ``RunConfig`` flags:
 * ``distributed``            — Ape-X actor pool vs 1-step loop   (Figs. 8/12)
 * ``algo``                   — sac | td3                         (Fig. 9)
 * ``prioritized``            — PER vs uniform replay
+* ``replay_backend``         — host (NumPy sum-tree) | device (repro.replay):
+  with ``"device"`` the collect->add half fuses into one jitted program
+  (``apex.collect_into``) and sample/update_priorities stay on device — the
+  replay store never crosses the host boundary. ``replay_kernel`` picks the
+  sum-tree implementation ("xla" scatter/gather or the "pallas" descent
+  kernel, interpret mode on CPU).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -23,6 +30,8 @@ import numpy as np
 from repro.common import tree_size
 from repro.core.effective_rank import effective_rank
 from repro.core.ofenet import OFENetConfig
+from repro.replay import (DeviceReplayConfig, replay_add, replay_init,
+                          replay_sample, replay_update)
 from repro.rl import apex, replay as replay_mod, sac as sac_mod, td3 as td3_mod
 from repro.rl.envs import EnvSpec, make_env, rollout_return
 
@@ -42,6 +51,8 @@ class RunConfig:
     n_core: int = 2
     n_env: int = 32
     prioritized: bool = True
+    replay_backend: str = "host"     # host | device
+    replay_kernel: str = "xla"       # device sum-tree impl: xla | pallas
     batch_size: int = 256
     total_steps: int = 2000          # gradient steps (paper x-axis)
     warmup_steps: int = 500
@@ -116,11 +127,6 @@ def run_training(cfg: RunConfig, progress: Optional[Callable] = None
     state = init_fn(k_init, acfg)
     n_params = tree_size(state["params"])
 
-    buf_cls = (replay_mod.PrioritizedReplay if cfg.prioritized
-               else replay_mod.UniformReplay)
-    buffer = buf_cls(cfg.replay_capacity, env.obs_dim, env.act_dim)
-    rng = np.random.default_rng(cfg.seed)
-
     n_actors = cfg.n_core * cfg.n_env if cfg.distributed else 1
     actor_states = apex.init_actor_states(env, k_actor, n_actors)
 
@@ -130,26 +136,60 @@ def run_training(cfg: RunConfig, progress: Optional[Callable] = None
     update_jit = jax.jit(lambda st, b, k: update_fn(st, acfg, b, k))
     rand = apex.random_policy(env.act_dim)
 
+    use_device = cfg.replay_backend == "device"
+    if use_device:
+        dcfg = DeviceReplayConfig(
+            capacity=cfg.replay_capacity, obs_dim=env.obs_dim,
+            act_dim=env.act_dim, uniform=not cfg.prioritized,
+            backend=cfg.replay_kernel,
+            interpret=jax.default_backend() == "cpu")
+        rstate = replay_init(dcfg)
+        add_fn = partial(replay_add, dcfg)
+        collect_step = apex.collect_into(env, policy_sample, add_fn)
+        collect_warm = apex.collect_into(env, rand, add_fn)
+    else:
+        assert cfg.replay_backend == "host", cfg.replay_backend
+        buf_cls = (replay_mod.PrioritizedReplay if cfg.prioritized
+                   else replay_mod.UniformReplay)
+        buffer = buf_cls(cfg.replay_capacity, env.obs_dim, env.act_dim)
+        rng = np.random.default_rng(cfg.seed)
+
     # --- warmup with random policy (paper A.4) -----------------------------
     key, kw = jax.random.split(key)
     warm_steps = max(cfg.warmup_steps // n_actors, 1)
-    actor_states, trs = apex.collect(env, rand, state["params"], actor_states,
-                                     warm_steps, kw)
-    buffer.add_batch(jax.tree_util.tree_map(np.asarray, trs))
+    if use_device:
+        actor_states, rstate = collect_warm(state["params"], actor_states,
+                                            kw, warm_steps, rstate)
+    else:
+        actor_states, trs = apex.collect(env, rand, state["params"],
+                                         actor_states, warm_steps, kw)
+        buffer.add_batch(jax.tree_util.tree_map(np.asarray, trs))
 
     returns, eval_steps, sranks = [], [], []
     last_metrics: Dict[str, float] = {}
     for step in range(1, cfg.total_steps + 1):
         # collect (distributed: n_actors transitions per learner step)
-        key, kc, ku = jax.random.split(key, 3)
-        actor_states, trs = apex.collect(env, policy_sample, state["params"],
-                                         actor_states, 1, kc)
-        buffer.add_batch(jax.tree_util.tree_map(np.asarray, trs))
-
-        batch_np, idx, weights = buffer.sample(cfg.batch_size, rng)
-        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        state, metrics = update_jit(state, batch, ku)
-        buffer.update_priorities(idx, np.asarray(metrics["priorities"]))
+        if use_device:
+            # collect+add fused; sample and priority refresh stay on device
+            key, kc, ks, ku = jax.random.split(key, 4)
+            actor_states, rstate = collect_step(state["params"], actor_states,
+                                                kc, 1, rstate)
+            batch, idx, weights = replay_sample(dcfg, rstate, ks,
+                                                cfg.batch_size)
+            batch = dict(batch, weight=weights)
+            state, metrics = update_jit(state, batch, ku)
+            rstate = replay_update(dcfg, rstate, idx, metrics["priorities"])
+        else:
+            key, kc, ku = jax.random.split(key, 3)
+            actor_states, trs = apex.collect(env, policy_sample,
+                                             state["params"], actor_states,
+                                             1, kc)
+            buffer.add_batch(jax.tree_util.tree_map(np.asarray, trs))
+            batch_np, idx, weights = buffer.sample(cfg.batch_size, rng)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            batch["weight"] = jnp.asarray(weights)
+            state, metrics = update_jit(state, batch, ku)
+            buffer.update_priorities(idx, np.asarray(metrics["priorities"]))
 
         if cfg.srank_every and step % cfg.srank_every == 0:
             sranks.append(int(effective_rank(metrics["q_features"])))

@@ -111,6 +111,8 @@ def td3_update(state: Params, cfg: TD3Config, batch: Dict[str, jax.Array],
     opt_cfg = AdamWConfig(lr=cfg.lr)
     s, a, r = batch["obs"], batch["act"], batch["rew"]
     s2, d = batch["next_obs"], batch["done"]
+    # PER importance weights (Schaul et al. 2016 eq. 2); absent key = uniform
+    w_is = batch.get("weight")
     metrics: Dict[str, jax.Array] = {}
     new_params = dict(params)
     new_opt = dict(opt)
@@ -141,9 +143,11 @@ def td3_update(state: Params, cfg: TD3Config, batch: Dict[str, jax.Array],
     def critic_loss(critics):
         q1, q2, _ = q_values(critics, work, cfg, s, a)
         e1, e2 = q1 - q_target, q2 - q_target
-        if cfg.huber:
-            return jnp.mean(huber(e1)) + jnp.mean(huber(e2))
-        return 0.5 * (jnp.mean(e1 ** 2) + jnp.mean(e2 ** 2))
+        l1, l2 = (huber(e1), huber(e2)) if cfg.huber \
+            else (0.5 * e1 ** 2, 0.5 * e2 ** 2)
+        if w_is is not None:
+            return jnp.mean(w_is * l1) + jnp.mean(w_is * l2)
+        return jnp.mean(l1) + jnp.mean(l2)
 
     l_q, g_q = jax.value_and_grad(critic_loss)(params["critics"])
     critics, opt_c = adamw_update(opt_cfg, g_q, opt["critics"],

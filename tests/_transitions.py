@@ -1,0 +1,16 @@
+"""Shared transition-batch factory for the replay test modules.
+
+Single source of truth for the replay transition schema in tests — when the
+schema grows (e.g. n-step fields), extend it here so the host-buffer and
+device-replay suites keep exercising identical shapes.
+"""
+import numpy as np
+
+
+def mk_batch(n, obs_dim=3, act_dim=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"obs": rng.normal(size=(n, obs_dim)).astype(np.float32),
+            "act": rng.normal(size=(n, act_dim)).astype(np.float32),
+            "rew": rng.normal(size=(n,)).astype(np.float32),
+            "next_obs": rng.normal(size=(n, obs_dim)).astype(np.float32),
+            "done": rng.integers(0, 2, size=(n,)).astype(np.float32)}

@@ -14,6 +14,9 @@ from repro.kernels.dense_block.ref import dense_concat_matmul_ref, fused_dense_r
 from repro.kernels.flash_attention.ops import gqa_flash
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.replay_tree import ops as rt_ops
+from repro.kernels.replay_tree import ref as rt_ref
+from repro.kernels.replay_tree.replay_tree import tree_sample, tree_set
 from repro.kernels.ssd_scan.ops import ssd_chunked_kernel
 from repro.kernels.ssd_scan.ssd_scan import ssd_chunk_dual
 from repro.kernels.ssd_scan.ref import ssd_chunk_dual_ref
@@ -160,3 +163,75 @@ def test_ssd_chunked_kernel_matches_models_ssm(chunk):
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_m),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- replay_tree
+
+@pytest.mark.parametrize("capacity", [5, 37, 64, 200])
+def test_replay_tree_set_kernel_matches_ref(capacity):
+    """Pallas scatter+resum == jnp oracle, incl. partial second update."""
+    rng = np.random.default_rng(10)
+    pr = jnp.asarray(rng.uniform(0.1, 5.0, capacity), jnp.float32)
+    idx = jnp.arange(capacity)
+    t_k = tree_set(rt_ref.tree_init_ref(capacity), idx, pr)
+    t_r = rt_ref.tree_set_ref(rt_ref.tree_init_ref(capacity), idx, pr)
+    np.testing.assert_allclose(np.asarray(t_k), np.asarray(t_r), rtol=1e-6)
+    sub = jnp.asarray(rng.integers(0, capacity, 7))
+    val = jnp.asarray(rng.uniform(0.1, 9.0, 7), jnp.float32)
+    np.testing.assert_allclose(np.asarray(tree_set(t_k, sub, val)),
+                               np.asarray(rt_ref.tree_set_ref(t_r, sub, val)),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("capacity,bt", [(37, 16), (128, 64), (1000, 128)])
+def test_replay_tree_sample_kernel_matches_ref(capacity, bt):
+    rng = np.random.default_rng(11)
+    pr = jnp.asarray(rng.uniform(0.0, 3.0, capacity), jnp.float32)
+    tree = rt_ref.tree_set_ref(rt_ref.tree_init_ref(capacity),
+                               jnp.arange(capacity), pr)
+    total = float(rt_ref.tree_total_ref(tree))
+    b = 2 * bt
+    targets = jnp.asarray(rng.uniform(0.0, total, b), jnp.float32)
+    leaf_k, pri_k = tree_sample(tree, targets, capacity=capacity, bt=bt)
+    leaf_r = rt_ref.tree_sample_ref(tree, targets, capacity=capacity)
+    np.testing.assert_array_equal(np.asarray(leaf_k), np.asarray(leaf_r))
+    np.testing.assert_allclose(np.asarray(pri_k),
+                               np.asarray(pr)[np.asarray(leaf_k)], rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_replay_tree_ops_match_host_sumtree(backend):
+    """Both dispatch backends agree with the NumPy SumTree end to end."""
+    from repro.rl.replay import SumTree
+    capacity = 73
+    rng = np.random.default_rng(12)
+    pr = rng.uniform(0.05, 4.0, capacity).astype(np.float32)
+    host = SumTree(capacity)
+    host.set(np.arange(capacity), pr)
+    tree = rt_ops.sumtree_set(rt_ops.sumtree_init(capacity),
+                              jnp.arange(capacity), jnp.asarray(pr),
+                              backend=backend)
+    np.testing.assert_allclose(float(rt_ops.sumtree_total(tree)), host.total,
+                               rtol=1e-5)
+    targets = rng.uniform(0, host.total, 300)
+    leaf, _ = rt_ops.sumtree_sample(tree, jnp.asarray(targets, jnp.float32),
+                                    capacity=capacity, backend=backend)
+    host_leaf = host.sample(targets)
+    assert (np.asarray(leaf) == host_leaf).mean() > 0.99   # float32 vs 64
+    assert np.asarray(leaf).min() >= 0 and np.asarray(leaf).max() < capacity
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_replay_tree_sample_edge_targets_clamped(backend):
+    """target == total (and beyond) stays inside [0, capacity)."""
+    capacity = 5
+    tree = rt_ops.sumtree_set(rt_ops.sumtree_init(capacity),
+                              jnp.arange(capacity),
+                              jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0]))
+    total = float(rt_ops.sumtree_total(tree))
+    leaf, _ = rt_ops.sumtree_sample(
+        tree, jnp.asarray([total, total * 2.0, 0.0], jnp.float32),
+        capacity=capacity, backend=backend)
+    leaf = np.asarray(leaf)
+    assert (leaf >= 0).all() and (leaf < capacity).all()
+    assert leaf[0] == capacity - 1 and leaf[2] == 0

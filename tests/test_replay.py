@@ -1,7 +1,7 @@
 """Property-based tests (hypothesis) for the prioritized replay sum-tree."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.rl.replay import PrioritizedReplay, SumTree, UniformReplay
 
@@ -50,13 +50,25 @@ def test_sumtree_sampling_proportional():
     np.testing.assert_allclose(freq, np.array([1, 2, 3, 4]) / 10, atol=0.01)
 
 
-def _mk_batch(n, obs_dim=3, act_dim=2, seed=0):
-    rng = np.random.default_rng(seed)
-    return {"obs": rng.normal(size=(n, obs_dim)).astype(np.float32),
-            "act": rng.normal(size=(n, act_dim)).astype(np.float32),
-            "rew": rng.normal(size=(n,)).astype(np.float32),
-            "next_obs": rng.normal(size=(n, obs_dim)).astype(np.float32),
-            "done": rng.integers(0, 2, size=(n,)).astype(np.float32)}
+def test_sumtree_sample_target_equal_total_stays_in_range():
+    """Regression: target mass == total must not walk past the last leaf.
+
+    With a non-power-of-two capacity the tree has zero-priority padding
+    leaves; a descent driven by t == total lands in that tail (and float
+    error in `t - lmass` can overshoot too). Sample must clamp to
+    [0, capacity).
+    """
+    capacity = 5
+    tree = SumTree(capacity)
+    tree.set(np.arange(capacity), np.array([1.0, 2.0, 3.0, 4.0, 5.0]))
+    leaves = tree.sample(np.array([tree.total, tree.total - 1e-13,
+                                   np.nextafter(tree.total, np.inf)]))
+    assert (leaves >= 0).all() and (leaves < capacity).all()
+    # exact-total target resolves to the last *valid* leaf
+    assert leaves[0] == capacity - 1
+
+
+from _transitions import mk_batch as _mk_batch  # noqa: E402
 
 
 @given(st.integers(min_value=1, max_value=64),
