@@ -1,0 +1,112 @@
+"""Loop-fusion benchmark: gradient-steps/sec, loop="python" vs loop="scan".
+
+The per-step Python loop dispatches ~5 host->device programs per gradient
+step; the scanned superstep amortizes ONE dispatch over a whole
+``eval_every`` chunk (see rl/runner.py). Both drivers run the identical
+superstep math (device replay, SAC, pendulum), so the gap is pure dispatch/
+transfer overhead — the quantity that bounds sweep throughput on CPU and
+dispatch-latency-bound accelerators alike.
+
+Timed via ``rl.runner.Trainer`` directly (warm call first, so compile time
+is excluded). The 4-fake-device mesh legs run in a subprocess because
+``--xla_force_host_platform_device_count`` must be set before jax init;
+there the scanned superstep routes through ``collect_and_add_sharded`` /
+``sharded_replay_sample``. Fake-device SPMD launches carry a large CONSTANT
+per-dispatch cost (~seconds of host-thread coordination, independent of scan
+length), so the mesh ratio is only meaningful with chunks long enough to
+amortize it — production ``eval_every`` chunks are 10k+ steps; real-ICI
+speedups are the roofline's story, these rows validate routing + overheads.
+
+  PYTHONPATH=src python -m benchmarks.loop_fusion
+"""
+import os
+import subprocess
+import sys
+import time
+
+
+def _cfg(loop, steps, mesh_shards=0):
+    from repro.rl.runner import RunConfig
+    return RunConfig(env="pendulum", algo="sac", num_units=32, num_layers=1,
+                     use_ofenet=False, distributed=True, n_core=1, n_env=16,
+                     total_steps=steps, warmup_steps=64, eval_every=steps,
+                     batch_size=64, replay_capacity=4096,
+                     replay_backend="device", loop=loop,
+                     mesh_shards=mesh_shards)
+
+
+def steps_per_sec(loop: str, steps: int, mesh_shards: int = 0) -> float:
+    """Steady-state gradient steps/sec (compile excluded via a warm call)."""
+    import jax
+    from repro.rl.runner import Trainer
+
+    trainer = Trainer(_cfg(loop, steps, mesh_shards))
+    ls = trainer.init()
+    if loop == "scan":
+        chunk = trainer.chunk_fn(steps, False, False, False)
+        ls, _ = chunk(ls)                       # compile + warm
+        jax.block_until_ready(ls.agent["params"])
+        t0 = time.time()
+        ls, _ = chunk(ls)
+        jax.block_until_ready(ls.agent["params"])
+        return steps / (time.time() - t0)
+    ls, _, _ = trainer.py_step(ls)              # compile + warm
+    jax.block_until_ready(ls.agent["params"])
+    t0 = time.time()
+    for _ in range(steps):
+        ls, _, _ = trainer.py_step(ls)
+    jax.block_until_ready(ls.agent["params"])
+    return steps / (time.time() - t0)
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+from benchmarks.loop_fusion import steps_per_sec
+for loop in ("python", "scan"):
+    print(f"RESULT,{loop},{steps_per_sec(loop, %d, mesh_shards=4):.3f}")
+"""
+
+
+def _mesh_rows(steps):
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep + root
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", _MESH_SCRIPT % steps],
+                       capture_output=True, text=True, env=env, timeout=900,
+                       cwd=root)
+    out = {}
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT,"):
+            _, loop, sps = line.split(",")
+            out[loop] = float(sps)
+    if not out:
+        raise RuntimeError(f"mesh subprocess failed: {r.stderr[-500:]}")
+    return out
+
+
+def run(scale: str = "quick"):
+    steps = 64 if scale == "quick" else 512
+    mesh_steps = 192 if scale == "quick" else 1024
+    rows = []
+
+    def emit(tag, sps, ratio=None):
+        derived = f"{sps:.0f}_steps/s" + (f"_x{ratio:.1f}" if ratio else "")
+        rows.append({"name": f"loop_fusion_{tag}", "us_per_call": 1e6 / sps,
+                     "derived": derived})
+
+    sps_py = steps_per_sec("python", steps)
+    sps_sc = steps_per_sec("scan", steps)
+    emit("python_1shard", sps_py)
+    emit("scan_1shard", sps_sc, sps_sc / sps_py)
+    mesh = _mesh_rows(mesh_steps)
+    emit("python_mesh4", mesh["python"])
+    emit("scan_mesh4", mesh["scan"], mesh["scan"] / mesh["python"])
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

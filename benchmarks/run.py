@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.loss_landscape_bench",
     "benchmarks.kernels_micro",
     "benchmarks.replay_micro",
+    "benchmarks.loop_fusion",
     "benchmarks.lm_substrate",
 ]
 

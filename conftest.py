@@ -13,3 +13,9 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 _SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+
+def pytest_configure(config):
+    # registered so CI's `-m "not slow"` gate is typo-safe
+    config.addinivalue_line(
+        "markers", "slow: long end-to-end runs (deselected in CI)")

@@ -10,8 +10,15 @@ no per-step host<->device transfer of the replay store. ``--replay-kernel
 pallas`` additionally routes the sum-tree through the Pallas descent kernel
 (interpret mode on CPU; see benchmarks/replay_micro.py for throughput).
 
+``--loop scan`` drives the whole collect->add->sample->update loop as a
+jitted ``lax.scan`` superstep — one host dispatch per eval chunk instead of
+~5 per gradient step (seed-identical to the python loop; throughput:
+benchmarks/loop_fusion.py). ``--n-step 3`` turns on Ape-X n-step returns,
+computed on device in the replay add path.
+
     PYTHONPATH=src python examples/rl_distributed.py [--steps 800]
         [--replay host|device] [--replay-kernel xla|pallas]
+        [--loop python|scan] [--n-step 1|3]
 """
 import argparse
 
@@ -35,14 +42,18 @@ def main():
     ap.add_argument("--replay", default="host", choices=["host", "device"])
     ap.add_argument("--replay-kernel", default="xla",
                     choices=["xla", "pallas"])
+    ap.add_argument("--loop", default="python", choices=["python", "scan"])
+    ap.add_argument("--n-step", type=int, default=1, choices=[1, 3])
     args = ap.parse_args()
     base = dict(env=args.env, algo="sac", num_units=128, num_layers=2,
                 connectivity="densenet", use_ofenet=True, ofenet_units=32,
                 ofenet_layers=2, distributed=True, n_core=2, n_env=16,
                 total_steps=args.steps, warmup_steps=300,
                 eval_every=args.steps // 2, replay_backend=args.replay,
-                replay_kernel=args.replay_kernel)
-    print(f"replay backend: {args.replay} ({args.replay_kernel})")
+                replay_kernel=args.replay_kernel, loop=args.loop,
+                n_step=args.n_step)
+    print(f"replay backend: {args.replay} ({args.replay_kernel}), "
+          f"loop={args.loop}, n_step={args.n_step}")
     print(f"{'variant':<14}{'max return':>12}{'params':>12}")
     for name, ov in VARIANTS.items():
         res = run_training(RunConfig(**{**base, **ov}))

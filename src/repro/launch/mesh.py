@@ -31,6 +31,14 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_actor_mesh(n_data: int):
+    """Data-only mesh for the RL runner's sharded actor/replay path
+    (``rl.runner.RunConfig(mesh_shards=n)``): one ``data`` slice per replay
+    shard / actor-pool slice, no model axis. Works on real devices or a
+    ``--xla_force_host_platform_device_count`` fake CPU mesh."""
+    return jax.make_mesh((int(n_data),), ("data",))
+
+
 def replay_shards(mesh) -> int:
     """Device-replay shard count: one logical replay shard per ``data`` slice
     (repro.replay.sharded, the Ape-X layout). Total replay capacity is the

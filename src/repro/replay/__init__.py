@@ -25,21 +25,30 @@ Backend switch: ``rl.runner.RunConfig(replay_backend="host" | "device",
 replay_kernel="xla" | "pallas")``. With ``"device"`` the runner threads the
 functional ``ReplayState`` through jitted add/sample/update steps — no
 per-step host<->device transfer of the replay store (see
-examples/rl_distributed.py and benchmarks/replay_micro.py).
+examples/rl_distributed.py and benchmarks/replay_micro.py). Because every
+operation is pure, the runner's ``loop="scan"`` superstep carries the whole
+ReplayState through ``jax.lax.scan`` — and on a mesh
+(``RunConfig(mesh_shards=n)``) through ``collect_and_add_sharded`` /
+``sharded_replay_sample`` inside the same scanned chunk. ``store.nstep_*``
+roll n-step returns (``RunConfig(n_step=3)``) on device in the add path;
+``ReplayState["add_step"]`` stamps rows for the priority-staleness metric.
 """
 from repro.replay.device import (DeviceReplay, DeviceReplayConfig,
                                  ReplayState, replay_add, replay_init,
                                  replay_sample, replay_update)
 from repro.replay.sharded import (collect_and_add_sharded,
-                                  sharded_replay_add, sharded_replay_init,
-                                  sharded_replay_sample,
+                                  sharded_nstep_init, sharded_replay_add,
+                                  sharded_replay_init, sharded_replay_sample,
                                   sharded_replay_update)
-from repro.replay.store import store_add, store_gather, store_init
+from repro.replay.store import (nstep_emit_flat, nstep_init, nstep_push,
+                                nstep_push_seq, store_add, store_gather,
+                                store_init)
 
 __all__ = [
     "DeviceReplay", "DeviceReplayConfig", "ReplayState",
     "replay_add", "replay_init", "replay_sample", "replay_update",
-    "collect_and_add_sharded", "sharded_replay_add", "sharded_replay_init",
-    "sharded_replay_sample", "sharded_replay_update",
+    "collect_and_add_sharded", "sharded_nstep_init", "sharded_replay_add",
+    "sharded_replay_init", "sharded_replay_sample", "sharded_replay_update",
+    "nstep_emit_flat", "nstep_init", "nstep_push", "nstep_push_seq",
     "store_add", "store_gather", "store_init",
 ]

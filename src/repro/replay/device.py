@@ -37,13 +37,20 @@ class DeviceReplayConfig:
     uniform: bool = False        # ablation w/o prioritization
     backend: str = "xla"         # sum-tree impl: "xla" | "pallas"
     interpret: bool = True       # Pallas interpret mode (CPU validation)
+    n_step: int = 1              # >1: rows carry an n-step "disc" column
 
 
 def replay_init(cfg: DeviceReplayConfig) -> ReplayState:
+    extra = ("disc",) if cfg.n_step > 1 else ()
     return {
-        "store": store_init(cfg.capacity, cfg.obs_dim, cfg.act_dim),
+        "store": store_init(cfg.capacity, cfg.obs_dim, cfg.act_dim,
+                            extra_fields=extra),
         "tree": sumtree_init(cfg.capacity),
         "max_priority": jnp.ones((), jnp.float32),
+        # learner step at which each row was written — sampled-batch
+        # staleness (learner step - add step) is the paper's on-policy-ness
+        # knob made measurable
+        "add_step": jnp.zeros((cfg.capacity,), jnp.int32),
     }
 
 
@@ -55,10 +62,18 @@ def _tree_set(cfg: DeviceReplayConfig, tree, idx, value):
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def replay_add(cfg: DeviceReplayConfig, state: ReplayState,
                batch: Dict[str, jax.Array],
-               priorities: Optional[jax.Array] = None) -> ReplayState:
-    """Append an actor batch; new rows get max priority unless given."""
+               priorities: Optional[jax.Array] = None,
+               step: Optional[jax.Array] = None) -> ReplayState:
+    """Append an actor batch; new rows get max priority unless given.
+
+    ``step`` (scalar learner step) stamps the written rows for the
+    priority-staleness metric; omitted => rows stamped 0.
+    """
     store, idx = store_add(state["store"], batch)
     out = dict(state, store=store)
+    if step is not None:
+        out["add_step"] = state["add_step"].at[idx].set(
+            jnp.asarray(step, jnp.int32))
     if cfg.uniform:
         return out
     if priorities is None:
@@ -81,8 +96,9 @@ def _sample_raw(cfg: DeviceReplayConfig, state: ReplayState, key: jax.Array,
     if cfg.uniform:
         idx = jax.random.randint(key, (batch_size,), 0,
                                  jnp.maximum(count, 1))
-        return store_gather(state["store"], idx), idx, \
-            jnp.ones((batch_size,), jnp.float32)
+        batch = store_gather(state["store"], idx)
+        batch["add_step"] = state["add_step"][idx]
+        return batch, idx, jnp.ones((batch_size,), jnp.float32)
     tree = state["tree"]
     total = sumtree_total(tree)
     u = jax.random.uniform(key, (batch_size,))
@@ -93,7 +109,9 @@ def _sample_raw(cfg: DeviceReplayConfig, state: ReplayState, key: jax.Array,
     idx = jnp.clip(idx, 0, jnp.maximum(count - 1, 0))
     p = sumtree_get(tree, idx) / jnp.maximum(total, 1e-12)
     w = (count * jnp.maximum(p, 1e-12)) ** (-cfg.beta)
-    return store_gather(state["store"], idx), idx, w.astype(jnp.float32)
+    batch = store_gather(state["store"], idx)
+    batch["add_step"] = state["add_step"][idx]
+    return batch, idx, w.astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "batch_size"))

@@ -26,6 +26,7 @@ from repro.common import shard_map
 from repro.launch.mesh import replay_shards
 from repro.replay.device import (DeviceReplayConfig, ReplayState, _sample_raw,
                                  replay_add, replay_init, replay_update)
+from repro.replay.store import nstep_emit_flat, nstep_init
 
 _SPEC = lambda _: P("data")
 
@@ -39,31 +40,49 @@ def _stacked(state):
     return jax.tree_util.tree_map(lambda x: x[None], state)
 
 
-def sharded_replay_init(cfg: DeviceReplayConfig, mesh) -> ReplayState:
-    """Per-shard states stacked on a leading ``data``-sharded axis.
-
-    ``cfg.capacity`` is the PER-SHARD capacity (total = capacity * n_data).
-    """
+def _shard_stacked_init(mesh, init_fn):
+    """Per-shard states from ``init_fn()`` stacked on a leading
+    ``data``-sharded axis, placed so each shard's slice lives on its own
+    devices."""
     n = replay_shards(mesh)
-    state = jax.vmap(lambda _: replay_init(cfg))(jnp.arange(n))
+    state = jax.vmap(lambda _: init_fn())(jnp.arange(n))
     return jax.device_put(
         state, jax.tree_util.tree_map(
             lambda _: NamedSharding(mesh, P("data")), state))
 
 
+def sharded_replay_init(cfg: DeviceReplayConfig, mesh) -> ReplayState:
+    """Per-shard states stacked on a leading ``data``-sharded axis.
+
+    ``cfg.capacity`` is the PER-SHARD capacity (total = capacity * n_data).
+    """
+    return _shard_stacked_init(mesh, lambda: replay_init(cfg))
+
+
+def sharded_nstep_init(mesh, n: int, actors_per_shard: int, obs_dim: int,
+                       act_dim: int):
+    """Per-shard n-step rollback rings (``repro.replay.store.nstep_init``),
+    stacked/sharded like ``sharded_replay_init`` — each shard rolls up the
+    n-step returns of its own actor slice."""
+    return _shard_stacked_init(
+        mesh, lambda: nstep_init(n, actors_per_shard, obs_dim, act_dim))
+
+
 def sharded_replay_add(cfg: DeviceReplayConfig, mesh, state: ReplayState,
                        batch: Dict[str, jax.Array],
-                       priorities: Optional[jax.Array] = None) -> ReplayState:
+                       priorities: Optional[jax.Array] = None,
+                       step: Optional[jax.Array] = None) -> ReplayState:
     """Each shard appends its slice of the (data-sharded) actor batch."""
-    def body(state, batch):
-        return _stacked(replay_add(cfg, _local(state), batch))
+    def body(state, batch, step):
+        return _stacked(replay_add(cfg, _local(state), batch, step=step))
 
+    step = jnp.zeros((), jnp.int32) if step is None else step
     return shard_map(
         body, mesh,
         in_specs=(jax.tree_util.tree_map(_SPEC, state),
-                  jax.tree_util.tree_map(_SPEC, batch)),
+                  jax.tree_util.tree_map(_SPEC, batch), P()),
         out_specs=jax.tree_util.tree_map(_SPEC, state),
-    )(state, batch)
+    )(state, batch, step)
 
 
 def sharded_replay_sample(cfg: DeviceReplayConfig, mesh, state: ReplayState,
@@ -84,11 +103,12 @@ def sharded_replay_sample(cfg: DeviceReplayConfig, mesh, state: ReplayState,
         w = w / jnp.maximum(jax.lax.pmax(jnp.max(w), "data"), 1e-12)
         return batch, idx, w
 
+    batch_spec = {k: P("data") for k in state["store"]["data"]}
+    batch_spec["add_step"] = P("data")   # _sample_raw appends the row stamps
     return shard_map(
         body, mesh,
         in_specs=(jax.tree_util.tree_map(_SPEC, state), P()),
-        out_specs=(jax.tree_util.tree_map(lambda _: P("data"), state["store"]
-                                          ["data"]), P("data"), P("data")),
+        out_specs=(batch_spec, P("data"), P("data")),
     )(state, key)
 
 
@@ -107,25 +127,48 @@ def sharded_replay_update(cfg: DeviceReplayConfig, mesh, state: ReplayState,
 
 def collect_and_add_sharded(env, policy_sample, mesh,
                             cfg: DeviceReplayConfig, params, states,
-                            steps: int, key, replay_state: ReplayState):
+                            steps: int, key, replay_state: ReplayState,
+                            nstep_state=None, gamma: float = 0.99,
+                            step=None, drop: int = 0):
     """One shard_map program: per-shard actor stepping + local replay add.
 
     The sharded twin of ``apex.collect_sharded`` — transitions go straight
     from the vectorized envs into the shard-local store without ever being
     gathered, the Ape-X topology as a single device program.
+
+    With ``nstep_state`` (from ``sharded_nstep_init``; requires
+    ``cfg.n_step > 1``) each shard rolls its slice of transitions through the
+    per-actor n-step ring before the add and the emitted rows carry ``disc``;
+    ``drop`` statically discards the first ``drop`` emitted step-rows (ring
+    priming during warmup). Returns ``(states, replay)`` without n-step, or
+    ``(states, nstep_state, replay)`` with it. ``step`` (scalar learner step)
+    stamps the written rows for the staleness metric.
     """
     from repro.rl import apex   # lazy: repro.rl.__init__ imports the runner
 
-    def body(params, states, key, rstate):
+    step = jnp.zeros((), jnp.int32) if step is None else step
+
+    def body(params, states, key, rstate, step, *rest):
         k = jax.random.fold_in(key, jax.lax.axis_index("data"))
         states, trs = apex.collect(env, policy_sample, params, states,
                                    steps, k)
-        return states, _stacked(replay_add(cfg, _local(rstate), trs))
+        if nstep_state is None:
+            return states, _stacked(replay_add(cfg, _local(rstate), trs,
+                                               step=step))
+        nbuf, flat = nstep_emit_flat(cfg.n_step, gamma, _local(rest[0]),
+                                     trs, steps, drop)
+        return states, _stacked(nbuf), _stacked(
+            replay_add(cfg, _local(rstate), flat, step=step))
 
-    return shard_map(
-        body, mesh,
-        in_specs=(P(), jax.tree_util.tree_map(_SPEC, states), P(),
-                  jax.tree_util.tree_map(_SPEC, replay_state)),
-        out_specs=(jax.tree_util.tree_map(_SPEC, states),
-                   jax.tree_util.tree_map(_SPEC, replay_state)),
-    )(params, states, key, replay_state)
+    args = [params, states, key, replay_state, step]
+    in_specs = [P(), jax.tree_util.tree_map(_SPEC, states), P(),
+                jax.tree_util.tree_map(_SPEC, replay_state), P()]
+    out_specs = [jax.tree_util.tree_map(_SPEC, states),
+                 jax.tree_util.tree_map(_SPEC, replay_state)]
+    if nstep_state is not None:
+        args.append(nstep_state)
+        in_specs.append(jax.tree_util.tree_map(_SPEC, nstep_state))
+        out_specs.insert(1, jax.tree_util.tree_map(_SPEC, nstep_state))
+
+    return shard_map(body, mesh, in_specs=tuple(in_specs),
+                     out_specs=tuple(out_specs))(*args)

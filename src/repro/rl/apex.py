@@ -70,7 +70,10 @@ def collect(env: EnvSpec, policy_sample: Callable, params: Params,
             st2, fresh)
         tr = {"obs": obs, "act": acts, "rew": rew, "next_obs": obs2,
               # bootstrap through timeouts (done=0), terminal otherwise
-              "done": jnp.where(timeout, 0.0, done.astype(jnp.float32))}
+              "done": jnp.where(timeout, 0.0, done.astype(jnp.float32)),
+              # episode cut AFTER this step (done or timeout): n-step return
+              # windows must not accumulate rewards across this edge
+              "boundary": need_reset.astype(jnp.float32)}
         return st3, tr
 
     keys = jax.random.split(key, steps)
@@ -103,23 +106,6 @@ def collect_sharded(env: EnvSpec, policy_sample: Callable, mesh,
         out_specs=(jax.tree_util.tree_map(lambda _: P("data"), states),
                    P("data")),
     )(params, states, key)
-
-
-def collect_into(env: EnvSpec, policy_sample: Callable, add_fn: Callable):
-    """Fuse actor collection with a device-replay add into ONE jitted step.
-
-    ``add_fn(replay_state, transitions) -> replay_state`` is the functional
-    add of ``repro.replay`` (config already bound). The returned
-    ``step(params, states, key, steps, replay_state)`` keeps transitions on
-    device end to end — the Ape-X collect+add half of the loop as a single
-    program (its sharded twin is ``replay.collect_and_add_sharded``).
-    """
-    @partial(jax.jit, static_argnums=(3,))
-    def step(params: Params, states: EnvState, key: PRNGKey, steps: int,
-             replay_state):
-        states, trs = collect(env, policy_sample, params, states, steps, key)
-        return states, add_fn(replay_state, trs)
-    return step
 
 
 def random_policy(act_dim: int):

@@ -260,3 +260,21 @@ def rollout_return(env: EnvSpec, policy_fn, key: jax.Array,
     (_, total), _ = jax.lax.scan(body, (s, jnp.float32(0.0)), None,
                                  length=steps)
     return total
+
+
+def eval_returns(env: EnvSpec, policy_fn, params, key: jax.Array,
+                 episodes: int) -> jax.Array:
+    """Per-episode deterministic-policy returns as ONE traceable program.
+
+    ``policy_fn(params, obs_batch) -> action_batch`` (the runner's mean
+    policy). All ``episodes`` rollouts run as a vmapped ``lax.scan``, so a
+    whole evaluation point costs a single host dispatch — and the scanned
+    training superstep can fold it into the same jitted chunk. Episode keys
+    are ``fold_in(key, i)``, matching the legacy per-episode loop.
+    """
+    def one(i):
+        return rollout_return(env,
+                              lambda o: policy_fn(params, o[None])[0],
+                              jax.random.fold_in(key, i))
+
+    return jax.vmap(one)(jnp.arange(episodes))

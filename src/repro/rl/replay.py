@@ -72,6 +72,7 @@ class PrioritizedReplay:
     alpha: float = 0.6
     beta: float = 0.4
     eps: float = 1e-6
+    n_step: int = 1          # >1: rows carry the n-step "disc" column
 
     def __post_init__(self):
         c = self.capacity
@@ -82,6 +83,10 @@ class PrioritizedReplay:
             "next_obs": np.zeros((c, self.obs_dim), np.float32),
             "done": np.zeros((c,), np.float32),
         }
+        if self.n_step > 1:
+            # bootstrap coefficient gamma^span * (1 - done), computed on
+            # device by repro.replay.store.nstep_push before the add
+            self.data["disc"] = np.zeros((c,), np.float32)
         self.tree = SumTree(c)
         self.ptr = 0
         self.count = 0
@@ -127,10 +132,12 @@ class UniformReplay:
     capacity: int
     obs_dim: int
     act_dim: int
+    n_step: int = 1
 
     def __post_init__(self):
         self._inner = PrioritizedReplay(self.capacity, self.obs_dim,
-                                        self.act_dim, alpha=0.0, beta=0.0)
+                                        self.act_dim, alpha=0.0, beta=0.0,
+                                        n_step=self.n_step)
 
     def __len__(self):
         return len(self._inner)

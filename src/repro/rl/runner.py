@@ -9,31 +9,63 @@ paper ablation is reachable through ``RunConfig`` flags:
 * ``distributed``            — Ape-X actor pool vs 1-step loop   (Figs. 8/12)
 * ``algo``                   — sac | td3                         (Fig. 9)
 * ``prioritized``            — PER vs uniform replay
-* ``replay_backend``         — host (NumPy sum-tree) | device (repro.replay):
-  with ``"device"`` the collect->add half fuses into one jitted program
-  (``apex.collect_into``) and sample/update_priorities stay on device — the
-  replay store never crosses the host boundary. ``replay_kernel`` picks the
-  sum-tree implementation ("xla" scatter/gather or the "pallas" descent
-  kernel, interpret mode on CPU).
+* ``replay_backend``         — host (NumPy sum-tree) | device (repro.replay)
+  with ``replay_kernel`` picking the device sum-tree impl ("xla" | "pallas")
+* ``n_step``                 — Ape-X n-step returns (1 | 3), computed on
+  device in the replay add path (repro.replay.store.nstep_push)
+* ``loop``                   — "python" | "scan":
+
+  The training loop is built around a functional ``TrainLoopState`` and a
+  pure superstep that fuses collect -> n-step -> add -> sample -> update ->
+  priority-refresh. ``loop="python"`` dispatches the superstep's pieces one
+  host call at a time (the debuggable legacy shape, ~5 dispatches per
+  gradient step). ``loop="scan"`` drives the SAME superstep with
+  ``jax.lax.scan`` in ``eval_every``-sized chunks — evaluation (a vmapped
+  rollout scan) folds into the same jitted chunk, so ``run_training`` issues
+  ``total_steps / eval_every + O(1)`` host dispatches total (plus
+  ``total_steps / srank_every`` when srank instrumentation is on: chunks
+  also stop at srank points so both drivers record identical steps; counted
+  in
+  ``RunResult.metrics["host_dispatches"]``; throughput:
+  benchmarks/loop_fusion.py). The host replay backend rides the scanned
+  superstep through ordered ``io_callback``s, so both backends are
+  seed-for-seed identical across ``loop=`` choices.
+
+* ``mesh_shards``            — >0 routes the superstep through the
+  mesh-sharded Ape-X wiring (``replay.collect_and_add_sharded`` +
+  ``sharded_replay_sample``): actors and replay shards live on the mesh
+  ``data`` axis (``launch.mesh.make_actor_mesh``), transitions never leave
+  their shard, and the learner consumes one coherent cross-shard batch.
+  Requires ``replay_backend="device"``.
+
+``RunResult.metrics`` also surfaces the priority-staleness distribution of
+the last sampled batch (``staleness_mean/p50/max`` = learner step - add
+step; -1 on the host backend, which does not stamp rows).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import io_callback
 
 from repro.common import tree_size
 from repro.core.effective_rank import effective_rank
 from repro.core.ofenet import OFENetConfig
-from repro.replay import (DeviceReplayConfig, replay_add, replay_init,
-                          replay_sample, replay_update)
+from repro.launch.mesh import make_actor_mesh, replay_shards
+from repro.replay import (DeviceReplayConfig, nstep_emit_flat, nstep_init,
+                          replay_add, replay_init, replay_sample,
+                          replay_update)
+from repro.replay import sharded as replay_sharded
 from repro.rl import apex, replay as replay_mod, sac as sac_mod, td3 as td3_mod
-from repro.rl.envs import EnvSpec, make_env, rollout_return
+from repro.rl.envs import EnvSpec, eval_returns, make_env
+
+_TRANSITION_FIELDS = ("obs", "act", "rew", "next_obs", "done")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +85,9 @@ class RunConfig:
     prioritized: bool = True
     replay_backend: str = "host"     # host | device
     replay_kernel: str = "xla"       # device sum-tree impl: xla | pallas
+    loop: str = "python"             # python (per-step dispatch) | scan
+    n_step: int = 1                  # Ape-X n-step returns (paper default 3)
+    mesh_shards: int = 0             # >0: shard actors+replay on a data mesh
     batch_size: int = 256
     total_steps: int = 2000          # gradient steps (paper x-axis)
     warmup_steps: int = 500
@@ -107,6 +142,7 @@ class RunResult:
     wall_time_s: float
     state: object = None             # only when cfg.keep_state
     last_batch: object = None
+    last_priorities: object = None   # final sampled-batch TD priorities
 
     @property
     def final_return(self) -> float:
@@ -117,98 +153,441 @@ class RunResult:
         return float(np.max(self.returns)) if self.returns else float("nan")
 
 
-def run_training(cfg: RunConfig, progress: Optional[Callable] = None
-                 ) -> RunResult:
-    t0 = time.time()
-    env = make_env(cfg.env)
-    acfg, init_fn, update_fn, sample_fn, mean_fn = _build(cfg, env)
-    key = jax.random.key(cfg.seed)
-    key, k_init, k_actor = jax.random.split(key, 3)
-    state = init_fn(k_init, acfg)
-    n_params = tree_size(state["params"])
+class TrainLoopState(NamedTuple):
+    """Everything the training loop threads between gradient steps — a pure
+    pytree so the whole superstep can live inside ``jax.lax.scan``."""
+    agent: Any       # algorithm state: params / opt / step
+    actors: Any      # vectorized EnvState of the Ape-X actor pool
+    nstep: Any       # per-actor n-step rollback ring (None when n_step == 1)
+    replay: Any      # ReplayState (device/sharded) or an i32 token (host)
+    key: jax.Array   # PRNG key, split once per superstep
+    step: jax.Array  # completed learner steps (i32) — stamps replay adds
 
-    n_actors = cfg.n_core * cfg.n_env if cfg.distributed else 1
-    actor_states = apex.init_actor_states(env, k_actor, n_actors)
 
-    def policy_sample(params, obs, k):
-        return sample_fn(params, obs, k)
+class Trainer:
+    """Builds every jitted piece of the training loop once.
 
-    update_jit = jax.jit(lambda st, b, k: update_fn(st, acfg, b, k))
-    rand = apex.random_policy(env.act_dim)
+    ``py_step`` runs one superstep as separate host dispatches (the legacy
+    debuggable loop); ``chunk_fn`` compiles ``n`` supersteps + optional
+    evaluation/srank into ONE program driven by ``jax.lax.scan``. Both share
+    the same pure ops and PRNG schedule, so they are seed-for-seed
+    interchangeable. ``dispatches`` counts host->device program launches
+    issued through this Trainer (the parity test's traced-call counter).
+    """
 
-    use_device = cfg.replay_backend == "device"
-    if use_device:
-        dcfg = DeviceReplayConfig(
-            capacity=cfg.replay_capacity, obs_dim=env.obs_dim,
-            act_dim=env.act_dim, uniform=not cfg.prioritized,
-            backend=cfg.replay_kernel,
-            interpret=jax.default_backend() == "cpu")
-        rstate = replay_init(dcfg)
-        add_fn = partial(replay_add, dcfg)
-        collect_step = apex.collect_into(env, policy_sample, add_fn)
-        collect_warm = apex.collect_into(env, rand, add_fn)
-    else:
-        assert cfg.replay_backend == "host", cfg.replay_backend
-        buf_cls = (replay_mod.PrioritizedReplay if cfg.prioritized
-                   else replay_mod.UniformReplay)
-        buffer = buf_cls(cfg.replay_capacity, env.obs_dim, env.act_dim)
-        rng = np.random.default_rng(cfg.seed)
+    def __init__(self, cfg: RunConfig, mesh=None):
+        self.cfg = cfg
+        self.dispatches = 0
+        self._chunks: Dict[tuple, Callable] = {}
+        self.env = env = make_env(cfg.env)
+        (self.acfg, self.init_fn, self.update_fn, sample_fn,
+         self.mean_fn) = _build(cfg, env)
+        self.n_actors = cfg.n_core * cfg.n_env if cfg.distributed else 1
+        self.gamma = self.acfg.gamma
 
-    # --- warmup with random policy (paper A.4) -----------------------------
-    key, kw = jax.random.split(key)
-    warm_steps = max(cfg.warmup_steps // n_actors, 1)
-    if use_device:
-        actor_states, rstate = collect_warm(state["params"], actor_states,
-                                            kw, warm_steps, rstate)
-    else:
-        actor_states, trs = apex.collect(env, rand, state["params"],
-                                         actor_states, warm_steps, kw)
-        buffer.add_batch(jax.tree_util.tree_map(np.asarray, trs))
+        if mesh is None and cfg.mesh_shards > 0:
+            mesh = make_actor_mesh(cfg.mesh_shards)
+        self.mesh = mesh
+        self.use_device = cfg.replay_backend == "device"
+        if mesh is not None:
+            if not self.use_device:
+                raise ValueError("mesh_shards requires replay_backend='device'")
+            shards = replay_shards(mesh)
+            if (self.n_actors % shards or cfg.batch_size % shards
+                    or cfg.replay_capacity % shards):
+                raise ValueError(
+                    f"mesh_shards={shards} must divide n_actors="
+                    f"{self.n_actors}, batch_size={cfg.batch_size} and "
+                    f"replay_capacity={cfg.replay_capacity}")
+        if not self.use_device and cfg.replay_backend != "host":
+            raise ValueError(cfg.replay_backend)
 
-    returns, eval_steps, sranks = [], [], []
-    last_metrics: Dict[str, float] = {}
-    for step in range(1, cfg.total_steps + 1):
-        # collect (distributed: n_actors transitions per learner step)
-        if use_device:
-            # collect+add fused; sample and priority refresh stay on device
-            key, kc, ks, ku = jax.random.split(key, 4)
-            actor_states, rstate = collect_step(state["params"], actor_states,
-                                                kc, 1, rstate)
-            batch, idx, weights = replay_sample(dcfg, rstate, ks,
-                                                cfg.batch_size)
-            batch = dict(batch, weight=weights)
-            state, metrics = update_jit(state, batch, ku)
-            rstate = replay_update(dcfg, rstate, idx, metrics["priorities"])
+        def train_policy(params, obs, k):
+            return sample_fn(params, obs, k)
+
+        self._train_policy = train_policy
+        self._rand_policy = apex.random_policy(env.act_dim)
+
+        # ------------------------------------------------ replay backends
+        if self.use_device:
+            shards = replay_shards(mesh) if mesh is not None else 1
+            self.dcfg = DeviceReplayConfig(
+                capacity=cfg.replay_capacity // shards, obs_dim=env.obs_dim,
+                act_dim=env.act_dim, uniform=not cfg.prioritized,
+                backend=cfg.replay_kernel,
+                interpret=jax.default_backend() == "cpu",
+                n_step=cfg.n_step)
+            self.buffer = None
         else:
-            key, kc, ku = jax.random.split(key, 3)
-            actor_states, trs = apex.collect(env, policy_sample,
-                                             state["params"], actor_states,
-                                             1, kc)
-            buffer.add_batch(jax.tree_util.tree_map(np.asarray, trs))
-            batch_np, idx, weights = buffer.sample(cfg.batch_size, rng)
-            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            batch["weight"] = jnp.asarray(weights)
-            state, metrics = update_jit(state, batch, ku)
-            buffer.update_priorities(idx, np.asarray(metrics["priorities"]))
+            buf_cls = (replay_mod.PrioritizedReplay if cfg.prioritized
+                       else replay_mod.UniformReplay)
+            self.buffer = buf_cls(cfg.replay_capacity, env.obs_dim,
+                                  env.act_dim, n_step=cfg.n_step)
+            self.rng = np.random.default_rng(cfg.seed)
+            self._host_fields = list(_TRANSITION_FIELDS)
+            if cfg.n_step > 1:
+                self._host_fields.append("disc")
 
-        if cfg.srank_every and step % cfg.srank_every == 0:
-            sranks.append(int(effective_rank(metrics["q_features"])))
-        if step % cfg.eval_every == 0 or step == cfg.total_steps:
-            key, ke = jax.random.split(key)
-            rets = [float(rollout_return(
-                env, lambda o: mean_fn(state["params"], o[None])[0],
-                jax.random.fold_in(ke, i)))
-                for i in range(cfg.eval_episodes)]
-            returns.append(float(np.mean(rets)))
-            eval_steps.append(step)
-            last_metrics = {k: float(np.asarray(v).mean())
-                            for k, v in metrics.items()
-                            if np.asarray(v).ndim == 0}
-            if progress:
-                progress(step, returns[-1], last_metrics)
+        # ------------------------------------------- jitted python-loop ops
+        w = self._count
+        self._update_j = w(jax.jit(
+            lambda st, b, k: self.update_fn(st, self.acfg, b, k)))
+        self.eval_j = w(jax.jit(lambda params, k: eval_returns(
+            env, self.mean_fn, params, k, cfg.eval_episodes)))
+        if self.use_device:
+            self._collect_add_j = w(jax.jit(partial(
+                self._op_collect_add, train_policy, steps=1, drop=0)))
+            self._sample_j = w(jax.jit(self._op_sample))
+            self._update_prio_j = w(jax.jit(self._op_update_prio))
+        else:
+            self._collect_emit_j = w(jax.jit(partial(
+                self._collect_emit, train_policy, steps=1, drop=0)))
 
+    # ------------------------------------------------------------- helpers
+    def _count(self, fn):
+        def wrapped(*args, **kwargs):
+            self.dispatches += 1
+            return fn(*args, **kwargs)
+        return wrapped
+
+    def _canonical_shardings(self):
+        """The mesh layout every TrainLoopState must keep: actor/replay/
+        n-step leaves split on ``data`` (leading axis), agent/key/step
+        replicated. Pinning both the initial state (device_put) and the
+        chunk outputs (with_sharding_constraint) keeps the jitted chunk's
+        signature stable — without it the second call recompiles against
+        the first call's drifted output shardings."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return (NamedSharding(self.mesh, P("data")),
+                NamedSharding(self.mesh, P()))
+
+    def _pin(self, ls: TrainLoopState, put=False) -> TrainLoopState:
+        if self.mesh is None:
+            return ls
+        data, rep = self._canonical_shardings()
+        if put:
+            place = jax.device_put
+        else:
+            # with_sharding_constraint can't express a rank-1 spec against a
+            # typed PRNG key's raw u32[..., 2] shape — let those propagate
+            def place(x, s):
+                if jnp.issubdtype(x.dtype, jax.dtypes.prng_key):
+                    return x
+                return jax.lax.with_sharding_constraint(x, s)
+        tm = jax.tree_util.tree_map
+        return TrainLoopState(
+            tm(lambda x: place(x, rep), ls.agent),
+            tm(lambda x: place(x, data), ls.actors),
+            tm(lambda x: place(x, data), ls.nstep),
+            tm(lambda x: place(x, data), ls.replay),
+            place(ls.key, rep), place(ls.step, rep))
+
+    def _collect_emit(self, policy, params, actors, nstate, key, *,
+                      steps: int, drop: int):
+        """collect ``steps`` env steps and roll them through the n-step ring
+        (identity for n_step == 1); returns store-schema transition rows."""
+        cfg = self.cfg
+        actors, trs = apex.collect(self.env, policy, params, actors, steps,
+                                   key)
+        if cfg.n_step == 1:
+            return actors, nstate, {k: trs[k] for k in _TRANSITION_FIELDS}
+        nstate, flat = nstep_emit_flat(cfg.n_step, self.gamma, nstate, trs,
+                                       steps, drop)
+        return actors, nstate, flat
+
+    # ------------------------------------------------- device backend ops
+    def _op_collect_add(self, policy, params, actors, nstate, rstate, key,
+                        step, *, steps: int, drop: int):
+        if self.mesh is not None:
+            if self.cfg.n_step > 1:
+                return replay_sharded.collect_and_add_sharded(
+                    self.env, policy, self.mesh, self.dcfg, params, actors,
+                    steps, key, rstate, nstep_state=nstate, gamma=self.gamma,
+                    step=step, drop=drop)
+            actors, rstate = replay_sharded.collect_and_add_sharded(
+                self.env, policy, self.mesh, self.dcfg, params, actors,
+                steps, key, rstate, step=step)
+            return actors, nstate, rstate
+        actors, nstate, flat = self._collect_emit(
+            policy, params, actors, nstate, key, steps=steps, drop=drop)
+        return actors, nstate, replay_add(self.dcfg, rstate, flat, step=step)
+
+    def _op_sample(self, rstate, key, step):
+        if self.mesh is not None:
+            batch, idx, weights = replay_sharded.sharded_replay_sample(
+                self.dcfg, self.mesh, rstate, key, self.cfg.batch_size)
+        else:
+            batch, idx, weights = replay_sample(self.dcfg, rstate, key,
+                                                self.cfg.batch_size)
+        staleness = (step - batch.pop("add_step")).astype(jnp.float32)
+        batch["weight"] = weights
+        return batch, idx, staleness
+
+    def _op_update_prio(self, rstate, idx, priorities):
+        if self.mesh is not None:
+            return replay_sharded.sharded_replay_update(
+                self.dcfg, self.mesh, rstate, idx, priorities)
+        return replay_update(self.dcfg, rstate, idx, priorities)
+
+    # --------------------------------------------- host backend callbacks
+    def _cb_add(self, *arrs):
+        self.buffer.add_batch(dict(zip(self._host_fields,
+                                       [np.asarray(a) for a in arrs])))
+        return np.int32(0)
+
+    def _cb_sample(self):
+        batch, idx, weights = self.buffer.sample(self.cfg.batch_size,
+                                                 self.rng)
+        return (tuple(batch[f].astype(np.float32)
+                      for f in self._host_fields)
+                + (idx.astype(np.int32), weights.astype(np.float32)))
+
+    def _cb_update(self, idx, priorities):
+        self.buffer.update_priorities(np.asarray(idx),
+                                      np.asarray(priorities))
+        return np.int32(0)
+
+    def _host_sample_shapes(self):
+        env, bs = self.env, self.cfg.batch_size
+        dims = {"obs": (bs, env.obs_dim), "act": (bs, env.act_dim),
+                "rew": (bs,), "next_obs": (bs, env.obs_dim), "done": (bs,),
+                "disc": (bs,)}
+        return (tuple(jax.ShapeDtypeStruct(dims[f], jnp.float32)
+                      for f in self._host_fields)
+                + (jax.ShapeDtypeStruct((bs,), jnp.int32),
+                   jax.ShapeDtypeStruct((bs,), jnp.float32)))
+
+    # ------------------------------------------------------ the superstep
+    def _device_step(self, ls, collect_add, sample, update, update_prio):
+        """The device-replay superstep over injectable ops — the scan body
+        passes the pure ops, the python driver their per-op jitted twins."""
+        key, kc, ks, ku = jax.random.split(ls.key, 4)
+        actors, nstate, rstate = collect_add(ls.agent["params"], ls.actors,
+                                             ls.nstep, ls.replay, kc,
+                                             ls.step)
+        batch, idx, staleness = sample(rstate, ks, ls.step)
+        agent, metrics = update(ls.agent, batch, ku)
+        rstate = update_prio(rstate, idx, metrics["priorities"])
+        return self._finish_step(ls, agent, actors, nstate, rstate, key,
+                                 staleness, metrics, batch)
+
+    def _finish_step(self, ls, agent, actors, nstate, rstate, key,
+                     staleness, metrics, batch):
+        """Shared superstep tail: staleness metrics + next TrainLoopState.
+        Keeping this single keeps the scan/python drivers seed-exact."""
+        metrics = dict(metrics,
+                       staleness_mean=staleness.mean(),
+                       staleness_p50=jnp.median(staleness),
+                       staleness_max=staleness.max())
+        ls = TrainLoopState(agent, actors, nstate, rstate, key, ls.step + 1)
+        return ls, metrics, batch
+
+    def _host_staleness(self):
+        # host buffer rows carry no add-step stamps: sentinel -1
+        return jnp.full((self.cfg.batch_size,), -1.0, jnp.float32)
+
+    def _superstep(self, ls: TrainLoopState):
+        """One pure collect->add->sample->update->refresh step — the scan
+        body. Host replay rides along via ordered io_callbacks on the SAME
+        buffer/rng the python loop uses, so the two loops stay seed-exact."""
+        if self.use_device:
+            return self._device_step(
+                ls,
+                partial(self._op_collect_add, self._train_policy, steps=1,
+                        drop=0),
+                self._op_sample,
+                lambda st, b, k: self.update_fn(st, self.acfg, b, k),
+                self._op_update_prio)
+        key, kc, ks, ku = jax.random.split(ls.key, 4)
+        actors, nstate, flat = self._collect_emit(
+            self._train_policy, ls.agent["params"], ls.actors, ls.nstep, kc,
+            steps=1, drop=0)
+        io_callback(self._cb_add, jax.ShapeDtypeStruct((), jnp.int32),
+                    *[flat[f] for f in self._host_fields], ordered=True)
+        out = io_callback(self._cb_sample, self._host_sample_shapes(),
+                          ordered=True)
+        batch = dict(zip(self._host_fields, out))
+        idx, batch["weight"] = out[-2], out[-1]
+        agent, metrics = self.update_fn(ls.agent, self.acfg, batch, ku)
+        io_callback(self._cb_update, jax.ShapeDtypeStruct((), jnp.int32),
+                    idx, metrics["priorities"], ordered=True)
+        return self._finish_step(ls, agent, actors, nstate, ls.replay, key,
+                                 self._host_staleness(), metrics, batch)
+
+    # ----------------------------------------------------------- drivers
+    def py_step(self, ls: TrainLoopState):
+        """One superstep as separate host dispatches (loop="python")."""
+        if self.use_device:
+            return self._device_step(ls, self._collect_add_j, self._sample_j,
+                                     self._update_j, self._update_prio_j)
+        key, kc, ks, ku = jax.random.split(ls.key, 4)
+        actors, nstate, flat = self._collect_emit_j(ls.agent["params"],
+                                                    ls.actors, ls.nstep, kc)
+        self.buffer.add_batch({k: np.asarray(v) for k, v in flat.items()})
+        batch_np, idx, weights = self.buffer.sample(self.cfg.batch_size,
+                                                    self.rng)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        batch["weight"] = jnp.asarray(weights)
+        agent, metrics = self._update_j(ls.agent, batch, ku)
+        self.buffer.update_priorities(idx, np.asarray(metrics["priorities"]))
+        return self._finish_step(ls, agent, actors, nstate, ls.replay, key,
+                                 self._host_staleness(), metrics, batch)
+
+    def chunk_fn(self, n_steps: int, do_eval: bool, do_srank: bool,
+                 want_last: bool) -> Callable:
+        """``n_steps`` supersteps (+ optional eval / srank / final batch) as
+        ONE jitted program: scan over the superstep, then a final unrolled
+        superstep whose full metrics feed srank and the result payload."""
+        sig = (n_steps, do_eval, do_srank, want_last)
+        if sig in self._chunks:
+            return self._chunks[sig]
+
+        def chunk(ls: TrainLoopState):
+            if n_steps > 1:
+                def body(c, _):
+                    c, _m, _b = self._superstep(c)
+                    return c, None
+                ls, _ = jax.lax.scan(body, ls, None, length=n_steps - 1)
+            ls, metrics, batch = self._superstep(ls)
+            out = {"scal": {k: v for k, v in metrics.items()
+                            if getattr(v, "ndim", None) == 0}}
+            if do_srank:
+                out["srank"] = effective_rank(metrics["q_features"])
+            if do_eval:
+                key, ke = jax.random.split(ls.key)
+                ls = ls._replace(key=key)
+                out["eval"] = eval_returns(self.env, self.mean_fn,
+                                           ls.agent["params"], ke,
+                                           self.cfg.eval_episodes)
+            if want_last:
+                out["last"] = (batch, metrics["priorities"])
+            return self._pin(ls), out
+
+        self._chunks[sig] = self._count(jax.jit(chunk))
+        return self._chunks[sig]
+
+    # ------------------------------------------------------- initial state
+    def init(self) -> TrainLoopState:
+        """Agent/actor/replay init + random-policy warmup (paper A.4)."""
+        cfg, env = self.cfg, self.env
+        key = jax.random.key(cfg.seed)
+        key, k_init, k_actor = jax.random.split(key, 3)
+        agent = self.init_fn(k_init, self.acfg)
+        self.n_params = tree_size(agent["params"])
+        actors = apex.init_actor_states(env, k_actor, self.n_actors)
+
+        nstate = None
+        if cfg.n_step > 1 and self.mesh is None:
+            nstate = nstep_init(cfg.n_step, self.n_actors, env.obs_dim,
+                                env.act_dim)
+        warm = max(cfg.warmup_steps // self.n_actors, 1, cfg.n_step)
+        drop = cfg.n_step - 1
+        key, kw = jax.random.split(key)
+        step0 = jnp.zeros((), jnp.int32)
+
+        if self.use_device:
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                shards = replay_shards(self.mesh)
+                actors = jax.device_put(actors, NamedSharding(self.mesh,
+                                                              P("data")))
+                rstate = replay_sharded.sharded_replay_init(self.dcfg,
+                                                            self.mesh)
+                if cfg.n_step > 1:
+                    nstate = replay_sharded.sharded_nstep_init(
+                        self.mesh, cfg.n_step, self.n_actors // shards,
+                        env.obs_dim, env.act_dim)
+            else:
+                rstate = replay_init(self.dcfg)
+            warm_j = self._count(jax.jit(partial(
+                self._op_collect_add, self._rand_policy, steps=warm,
+                drop=drop)))
+            actors, nstate, rstate = warm_j(agent["params"], actors, nstate,
+                                            rstate, kw, step0)
+        else:
+            warm_j = self._count(jax.jit(partial(
+                self._collect_emit, self._rand_policy, steps=warm,
+                drop=drop)))
+            actors, nstate, flat = warm_j(agent["params"], actors, nstate,
+                                          kw)
+            self.buffer.add_batch({k: np.asarray(v)
+                                   for k, v in flat.items()})
+            rstate = jnp.zeros((), jnp.int32)   # order token placeholder
+        return self._pin(TrainLoopState(agent, actors, nstate, rstate, key,
+                                        step0), put=True)
+
+
+def run_training(cfg: RunConfig, progress: Optional[Callable] = None,
+                 mesh=None) -> RunResult:
+    t0 = time.time()
+    trainer = Trainer(cfg, mesh=mesh)
+    ls = trainer.init()
+
+    returns: List[float] = []
+    eval_steps: List[int] = []
+    sranks: List[int] = []
+    last_metrics: Dict[str, float] = {}
+    last_batch = None
+    last_priorities = None
+    total = cfg.total_steps
+
+    if cfg.loop == "scan":
+        # chunk boundaries: every eval point AND (when instrumented) every
+        # srank point, so the scan driver records the exact same
+        # returns/sranks steps as the per-step python loop
+        step = 0
+        while step < total:
+            stops = [(step // cfg.eval_every + 1) * cfg.eval_every, total]
+            if cfg.srank_every:
+                stops.append((step // cfg.srank_every + 1)
+                             * cfg.srank_every)
+            stop = min(stops)
+            do_eval = stop % cfg.eval_every == 0 or stop == total
+            do_srank = bool(cfg.srank_every) and stop % cfg.srank_every == 0
+            want_last = cfg.keep_state and stop == total
+            ls, out = trainer.chunk_fn(stop - step, do_eval, do_srank,
+                                       want_last)(ls)
+            step = stop
+            if do_srank:
+                sranks.append(int(out["srank"]))
+            if want_last:
+                last_batch, last_priorities = out["last"]
+            if do_eval:
+                returns.append(float(np.mean(np.asarray(out["eval"]))))
+                eval_steps.append(step)
+                last_metrics = {k: float(np.asarray(v))
+                                for k, v in out["scal"].items()}
+                if progress:
+                    progress(step, returns[-1], last_metrics)
+    else:
+        if cfg.loop != "python":
+            raise ValueError(f"unknown loop={cfg.loop!r}")
+        metrics = batch = None
+        for step in range(1, total + 1):
+            ls, metrics, batch = trainer.py_step(ls)
+            if cfg.srank_every and step % cfg.srank_every == 0:
+                sranks.append(int(effective_rank(metrics["q_features"])))
+            if step % cfg.eval_every == 0 or step == total:
+                key, ke = jax.random.split(ls.key)
+                ls = ls._replace(key=key)
+                rets = np.asarray(trainer.eval_j(ls.agent["params"], ke))
+                returns.append(float(rets.mean()))
+                eval_steps.append(step)
+                last_metrics = {k: float(np.asarray(v).mean())
+                                for k, v in metrics.items()
+                                if np.asarray(v).ndim == 0}
+                if progress:
+                    progress(step, returns[-1], last_metrics)
+        if cfg.keep_state and metrics is not None:
+            last_batch = batch
+            last_priorities = metrics["priorities"]
+
+    metrics_out = dict(last_metrics,
+                       host_dispatches=float(trainer.dispatches))
     return RunResult(returns=returns, eval_steps=eval_steps, sranks=sranks,
-                     metrics=last_metrics, param_count=n_params,
+                     metrics=metrics_out, param_count=trainer.n_params,
                      wall_time_s=time.time() - t0,
-                     state=state if cfg.keep_state else None,
-                     last_batch=batch if cfg.keep_state else None)
+                     state=ls.agent if cfg.keep_state else None,
+                     last_batch=last_batch,
+                     last_priorities=(None if last_priorities is None
+                                      else np.asarray(last_priorities)))

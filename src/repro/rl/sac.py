@@ -173,8 +173,13 @@ def sac_update(state: Params, cfg: SACConfig, batch: Dict[str, jax.Array],
     alpha = jnp.exp(params["log_alpha"])
     a2, logp2 = sample_action(work, cfg, s2, k1)
     q1_t, q2_t, _ = q_values(params["target_critics"], work, cfg, s2, a2)
-    q_target = r + cfg.gamma * (1.0 - d) * (jnp.minimum(q1_t, q2_t)
-                                            - alpha * logp2)
+    # bootstrap coefficient: gamma^span * (1 - done). n-step batches carry it
+    # precomputed as "disc" (repro.replay.store.nstep_push); 1-step falls
+    # back to the usual gamma * (1 - done)
+    disc = batch.get("disc")
+    if disc is None:
+        disc = cfg.gamma * (1.0 - d)
+    q_target = r + disc * (jnp.minimum(q1_t, q2_t) - alpha * logp2)
     q_target = jax.lax.stop_gradient(q_target)
 
     def critic_loss(critics):

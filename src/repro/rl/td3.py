@@ -137,8 +137,12 @@ def td3_update(state: Params, cfg: TD3Config, batch: Dict[str, jax.Array],
                      -cfg.noise_clip, cfg.noise_clip)
     a2 = jnp.clip(policy(work, cfg, s2, "target_actor") + noise, -1, 1)
     q1_t, q2_t, _ = q_values(params["target_critics"], work, cfg, s2, a2)
-    q_target = jax.lax.stop_gradient(
-        r + cfg.gamma * (1.0 - d) * jnp.minimum(q1_t, q2_t))
+    # n-step batches carry the bootstrap coefficient gamma^span * (1 - done)
+    # precomputed as "disc"; 1-step falls back to gamma * (1 - done)
+    disc = batch.get("disc")
+    if disc is None:
+        disc = cfg.gamma * (1.0 - d)
+    q_target = jax.lax.stop_gradient(r + disc * jnp.minimum(q1_t, q2_t))
 
     def critic_loss(critics):
         q1, q2, _ = q_values(critics, work, cfg, s, a)
