@@ -21,7 +21,9 @@ PAPER = dict(total_steps=1_000_000, warmup_steps=10_000, eval_every=10_000,
 
 
 def make_cfg(scale: str, **overrides) -> RunConfig:
-    base = dict(QUICK if scale == "quick" else PAPER)
+    # only "paper" opts into the 1M-step settings; anything else (quick,
+    # smoke, unknown) stays on the CPU budget
+    base = dict(PAPER if scale == "paper" else QUICK)
     base.update(overrides)
     return RunConfig(**base)
 

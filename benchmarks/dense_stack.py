@@ -1,0 +1,95 @@
+"""Fused streaming DenseNet-stack vs the jnp concat loop, fwd and fwd+bwd.
+
+Sweeps the paper's depth/width grid (L in {4,8,12}, U in {256,512,1024}) at
+the SAC batch size (256) and compares ``kernels.dense_block.stack``'s fused
+backend against the autodiffed jnp reference loop:
+
+* ``fwd``      — feature forward only
+* ``fwdbwd``   — value + grads wrt (x, weights, biases), the shape of the
+                 critic/OFENet update hot path
+
+On CPU the fused backend is the XLA streaming twin of the Pallas kernel
+(interpret-off oracle — interpret-mode Pallas only checks correctness); on
+TPU it is the real kernel. Timing is min-over-reps after a warm call, so
+compile time and scheduler noise are excluded. ``derived`` records the
+speedup over the jnp loop; the acceptance bar is >=1.5x fwd+bwd at L=8,
+U>=512.
+
+  PYTHONPATH=src python -m benchmarks.dense_stack
+"""
+import time
+
+D0, BATCH = 256, 256
+SWEEPS = {
+    "smoke": [(4, 256)],
+    "quick": [(4, 256), (4, 512), (4, 1024),
+              (8, 256), (8, 512), (8, 1024),
+              (12, 256), (12, 512), (12, 1024)],
+}
+REPS = {"smoke": 1, "quick": 5, "paper": 20}
+
+
+def _bench_pair(fn_a, fn_b, *args, reps):
+    """Min-over-reps of two fns with interleaved calls, so background-load
+    drift (shared CI/container CPUs) hits both sides of the ratio equally."""
+    import jax
+    jax.block_until_ready(fn_a(*args))    # compile + warm
+    jax.block_until_ready(fn_b(*args))
+    best_a = best_b = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a * 1e6, best_b * 1e6     # us
+
+
+def _make(L, U):
+    import jax
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 2 * L + 1)
+    x = jax.random.normal(ks[0], (BATCH, D0))
+    ws = tuple(jax.random.normal(ks[1 + i], (D0 + i * U, U)) * 0.05
+               for i in range(L))
+    bs = tuple(jax.random.normal(ks[1 + L + i], (U,)) * 0.05
+               for i in range(L))
+    return x, ws, bs
+
+
+def run(scale: str = "quick"):
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.dense_block.stack import dense_stack, dense_stack_ref
+
+    reps = REPS.get(scale, REPS["paper"])
+    sweep = SWEEPS.get(scale, SWEEPS["quick"])
+    rows = []
+    for L, U in sweep:
+        x, ws, bs = _make(L, U)
+        fused_f = jax.jit(lambda x, ws, bs: dense_stack(x, ws, bs))
+        ref_f = jax.jit(dense_stack_ref)
+
+        def loss(f):
+            return lambda x, ws, bs: jnp.mean(f(x, ws, bs) ** 2)
+        fused_g = jax.jit(jax.grad(loss(dense_stack), argnums=(0, 1, 2)))
+        ref_g = jax.jit(jax.grad(loss(dense_stack_ref), argnums=(0, 1, 2)))
+
+        for tag, fn_fused, fn_ref in [("fwd", fused_f, ref_f),
+                                      ("fwdbwd", fused_g, ref_g)]:
+            us_f, us_r = _bench_pair(fn_fused, fn_ref, x, ws, bs, reps=reps)
+            ratio = us_r / us_f
+            rows.append({
+                "name": f"dense_stack_L{L}_U{U}_{tag}",
+                "us_per_call": us_f,
+                "derived": f"x{ratio:.2f}_vs_jnp",
+                "jnp_us_per_call": round(us_r, 1),
+                "batch": BATCH, "d0": D0,
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

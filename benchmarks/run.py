@@ -1,9 +1,14 @@
 """Benchmark harness: one module per paper table/figure (DESIGN.md §6).
 
-Prints ``name,us_per_call,derived`` CSV per the harness contract and writes
-the full rows to experiments/bench_results.json.
+Prints ``name,us_per_call,derived`` CSV per the harness contract and merges
+the full rows into experiments/bench_results.json (rows with the same name
+are replaced, others are kept, so ``--only`` reruns never drop results).
 
   PYTHONPATH=src python -m benchmarks.run [--scale quick|paper] [--only fig5]
+
+``--smoke`` is the CI bitrot guard: one-rep runs of the kernel/loop
+benchmarks (dense_stack, loop_fusion) with failures fatal instead of
+swallowed, results written to experiments/bench_smoke.json.
 """
 import argparse
 import importlib
@@ -24,34 +29,58 @@ MODULES = [
     "benchmarks.loss_landscape_bench",
     "benchmarks.kernels_micro",
     "benchmarks.replay_micro",
+    "benchmarks.dense_stack",
     "benchmarks.loop_fusion",
     "benchmarks.lm_substrate",
 ]
+
+SMOKE_MODULES = ["benchmarks.dense_stack", "benchmarks.loop_fusion"]
+
+
+def _merge_write(path: Path, rows) -> None:
+    """Replace same-name rows, keep the rest — --only reruns stay additive."""
+    existing = []
+    if path.exists():
+        try:
+            existing = json.loads(path.read_text())
+        except Exception:
+            existing = []
+    new_names = {r["name"] for r in rows}
+    merged = [r for r in existing if r.get("name") not in new_names] + rows
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(merged, indent=1, default=str))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="quick", choices=["quick", "paper"])
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one-rep kernel/loop benchmarks, failures fatal")
     args = ap.parse_args()
 
-    mods = [m for m in MODULES if args.only in m] if args.only else MODULES
+    mods = SMOKE_MODULES if args.smoke else MODULES
+    if args.only:
+        mods = [m for m in mods if args.only in m]
+    scale = "smoke" if args.smoke else args.scale
     all_rows = []
     print("name,us_per_call,derived")
     for mod_name in mods:
         t0 = time.time()
         mod = importlib.import_module(mod_name)
         try:
-            rows = mod.run(args.scale)
+            rows = mod.run(scale)
         except Exception as e:  # keep the harness going
+            if args.smoke:
+                raise
             print(f"{mod_name},0,ERROR:{type(e).__name__}:{e}")
             continue
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
         all_rows.extend(rows)
-    out = Path("experiments/bench_results.json")
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps(all_rows, indent=1, default=str))
+    out = Path("experiments/bench_smoke.json" if args.smoke
+               else "experiments/bench_results.json")
+    _merge_write(out, all_rows)
 
 
 if __name__ == "__main__":

@@ -14,11 +14,14 @@ pallas`` additionally routes the sum-tree through the Pallas descent kernel
 jitted ``lax.scan`` superstep — one host dispatch per eval chunk instead of
 ~5 per gradient step (seed-identical to the python loop; throughput:
 benchmarks/loop_fusion.py). ``--n-step 3`` turns on Ape-X n-step returns,
-computed on device in the replay add path.
+computed on device in the replay add path. ``--block-backend fused`` runs
+every MLP block (actor, critics, OFENet) through the fused streaming
+DenseNet-stack kernel (kernels/dense_block/stack.py; throughput:
+benchmarks/dense_stack.py).
 
     PYTHONPATH=src python examples/rl_distributed.py [--steps 800]
         [--replay host|device] [--replay-kernel xla|pallas]
-        [--loop python|scan] [--n-step 1|3]
+        [--loop python|scan] [--n-step 1|3] [--block-backend jnp|fused]
 """
 import argparse
 
@@ -44,6 +47,8 @@ def main():
                     choices=["xla", "pallas"])
     ap.add_argument("--loop", default="python", choices=["python", "scan"])
     ap.add_argument("--n-step", type=int, default=1, choices=[1, 3])
+    ap.add_argument("--block-backend", default="jnp",
+                    choices=["jnp", "fused"])
     args = ap.parse_args()
     base = dict(env=args.env, algo="sac", num_units=128, num_layers=2,
                 connectivity="densenet", use_ofenet=True, ofenet_units=32,
@@ -51,9 +56,10 @@ def main():
                 total_steps=args.steps, warmup_steps=300,
                 eval_every=args.steps // 2, replay_backend=args.replay,
                 replay_kernel=args.replay_kernel, loop=args.loop,
-                n_step=args.n_step)
+                n_step=args.n_step, block_backend=args.block_backend)
     print(f"replay backend: {args.replay} ({args.replay_kernel}), "
-          f"loop={args.loop}, n_step={args.n_step}")
+          f"loop={args.loop}, n_step={args.n_step}, "
+          f"blocks={args.block_backend}")
     print(f"{'variant':<14}{'max return':>12}{'params':>12}")
     for name, ov in VARIANTS.items():
         res = run_training(RunConfig(**{**base, **ov}))

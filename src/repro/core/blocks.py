@@ -16,6 +16,14 @@ SAC agents and uses Swish activations; both are config options here.
 BatchNorm under data parallelism: when ``axis_name`` is given to ``apply``,
 batch statistics are psum-reduced across that mesh axis (the paper is
 single-GPU; see DESIGN.md §2).
+
+``backend`` picks the hidden-stack implementation: ``"jnp"`` is the concat
+loop below; ``"fused"`` routes the whole stack through the streaming kernel
+in ``kernels/dense_block/stack.py`` (one fused pass + custom VJP, the
+concat never materializes). The fused path covers the paper's SAC setting —
+mlp/densenet/d2rl without batch norm — and silently falls back to the jnp
+loop otherwise (BN, resnet, gelu, zero layers), so the switch is always
+safe to flip.
 """
 from __future__ import annotations
 
@@ -26,8 +34,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import Params, PRNGKey, dense_apply, dense_init, get_activation
+from repro.kernels.dense_block import stack as _stack
 
 CONNECTIVITIES = ("mlp", "resnet", "densenet", "d2rl")
+BLOCK_BACKENDS = ("jnp", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,10 +50,20 @@ class MLPBlockConfig:
     batch_norm: bool = False
     out_dim: Optional[int] = None          # if set, append a linear output layer
     final_activation: str = "identity"
+    backend: str = "jnp"                   # jnp | fused (stack kernel)
 
     def __post_init__(self):
         if self.connectivity not in CONNECTIVITIES:
             raise ValueError(f"connectivity must be one of {CONNECTIVITIES}")
+        if self.backend not in BLOCK_BACKENDS:
+            raise ValueError(f"backend must be one of {BLOCK_BACKENDS}")
+
+    @property
+    def fused_supported(self) -> bool:
+        """Whether the fused stack kernel covers this config exactly."""
+        return (self.connectivity in _stack.FUSED_CONNECTIVITIES
+                and self.activation in _stack.FUSED_ACTIVATIONS
+                and not self.batch_norm and self.num_layers > 0)
 
     def layer_in_dims(self) -> Tuple[int, ...]:
         """Input width of each hidden layer under this connectivity."""
@@ -118,8 +138,18 @@ def mlp_block_apply(params: Params, cfg: MLPBlockConfig, x: jax.Array, *,
     Returns ``(output, feature, new_params)`` where ``feature`` is the
     penultimate representation (used for effective-rank measurements and by
     OFENet consumers) and ``new_params`` carries refreshed BN running stats
-    (identical to ``params`` when BN is off).
+    (``params`` itself, unchanged, when BN is off).
     """
+    if cfg.backend == "fused" and cfg.fused_supported:
+        feature = _stack.dense_stack(
+            x, tuple(l["dense"]["w"] for l in params["layers"]),
+            tuple(l["dense"]["b"] for l in params["layers"]),
+            connectivity=cfg.connectivity, activation=cfg.activation)
+        out = feature
+        if cfg.out_dim is not None:
+            out = dense_apply(params["out"], feature)
+            out = get_activation(cfg.final_activation)(out)
+        return out, feature, params
     act = get_activation(cfg.activation)
     stream = x                       # densenet running concat stream
     h = x
@@ -132,17 +162,15 @@ def mlp_block_apply(params: Params, cfg: MLPBlockConfig, x: jax.Array, *,
         else:
             inp = h
         y = dense_apply(layer["dense"], inp)
-        new_layer = dict(layer)
         if cfg.batch_norm:
             y, stats = _bn_apply(layer["bn"], y, train=train, axis_name=axis_name)
-            new_layer["bn"] = {**layer["bn"], **stats}
+            new_layers.append({**layer, "bn": {**layer["bn"], **stats}})
         y = act(y)
         if cfg.connectivity == "resnet" and h.shape[-1] == y.shape[-1]:
             y = y + h
         h = y
         if cfg.connectivity == "densenet":
             stream = jnp.concatenate([stream, y], axis=-1)
-        new_layers.append(new_layer)
 
     feature = stream if cfg.connectivity == "densenet" else h
     if cfg.num_layers == 0:
@@ -151,5 +179,7 @@ def mlp_block_apply(params: Params, cfg: MLPBlockConfig, x: jax.Array, *,
     if cfg.out_dim is not None:
         out = dense_apply(params["out"], feature)
         out = get_activation(cfg.final_activation)(out)
-    new_params = {**params, "layers": new_layers}
+    # no BN -> nothing to refresh: hand back the SAME pytree (no dict churn
+    # inside the scanned superstep)
+    new_params = {**params, "layers": new_layers} if cfg.batch_norm else params
     return out, feature, new_params

@@ -36,13 +36,15 @@ class OFENetConfig:
     activation: str = "swish"
     batch_norm: bool = True      # paper uses BN inside OFENet
     tau: float = 0.005           # target-net smoothing (paper A.1)
+    block_backend: str = "jnp"   # jnp | fused (BN-off only; see blocks.py)
 
     @property
     def state_block(self) -> MLPBlockConfig:
         return MLPBlockConfig(
             in_dim=self.state_dim, num_layers=self.num_layers,
             num_units=self.num_units, connectivity=self.connectivity,
-            activation=self.activation, batch_norm=self.batch_norm)
+            activation=self.activation, batch_norm=self.batch_norm,
+            backend=self.block_backend)
 
     @property
     def sa_block(self) -> MLPBlockConfig:
@@ -50,7 +52,7 @@ class OFENetConfig:
             in_dim=self.state_feature_dim + self.action_dim,
             num_layers=self.num_layers, num_units=self.num_units,
             connectivity=self.connectivity, activation=self.activation,
-            batch_norm=self.batch_norm)
+            batch_norm=self.batch_norm, backend=self.block_backend)
 
     @property
     def state_feature_dim(self) -> int:

@@ -1,6 +1,25 @@
-# Pallas TPU kernels for the compute hot spots (validated on CPU via
-# interpret=True): the paper's wide-DenseNet dense layer (fused
-# concat-matmul-swish), flash attention for the transformer substrate's
-# prefill path, the Mamba2 SSD intra-chunk dual form, and the replay
-# sum-tree (fused proportional-descent sample + scatter/resum set) backing
-# the device-resident prioritized replay in repro.replay.
+"""Pallas TPU kernels for the compute hot spots (validated on CPU via
+interpret=True): the paper's wide-DenseNet dense layer (fused
+concat-matmul-swish) and the fused multi-layer DenseNet *stack*
+(dense_block/stack.py — forward + custom-VJP backward, the first kernel the
+RL agents train through), flash attention for the transformer substrate's
+prefill path, the Mamba2 SSD intra-chunk dual form, and the replay
+sum-tree (fused proportional-descent sample + one-hot-matmul set) backing
+the device-resident prioritized replay in repro.replay.
+
+``default_interpret()`` is the shared interpret-mode policy: kernels
+real-lower on TPU and fall back to the Pallas interpreter everywhere else,
+so the same call sites work unchanged on CPU CI and TPU hardware.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an ``interpret`` argument: None -> interpret off-TPU only."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 try:  # TPU memory spaces; interpret mode emulates them on CPU
     from jax.experimental.pallas import tpu as pltpu
     _SCRATCH = lambda bm, bn: pltpu.VMEM((bm, bn), jnp.float32)
@@ -53,13 +55,15 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk: int, activation: str,
                                              "interpret"))
 def fused_dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
                 activation: str = "swish", bm: int = 128, bn: int = 128,
-                bk: int = 128, interpret: bool = True) -> jax.Array:
+                bk: int = 128, interpret: bool | None = None) -> jax.Array:
     """act(x @ w + b). x: (M, K); w: (K, N); b: (N,) or None.
 
     M, K, N must be multiples of the block sizes (callers pad; the paper's
     widths are powers of two after the first layer, and we round the stream
-    segments up in ops.py).
+    segments up in ops.py). ``interpret=None`` auto-selects: real Mosaic
+    lowering on TPU, the Pallas interpreter elsewhere.
     """
+    interpret = default_interpret(interpret)
     m, k = x.shape
     k2, n = w.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (

@@ -4,6 +4,11 @@
 the stream segments NEVER materializes — W is split row-wise per segment and
 the kernel accumulates partial products (the final add + activation is one
 fused elementwise pass). Segment widths are padded to the K block size.
+
+``interpret`` defaults to ``None`` = auto: interpret mode off-TPU, real
+Mosaic lowering on TPU (``repro.kernels.default_interpret``, same policy
+the replay_tree dispatch follows), so identical call sites validate on CPU
+CI and run the hardware kernel in production.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ from typing import List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.dense_block.dense_block import fused_dense
 
 
@@ -28,8 +34,9 @@ def fused_dense_padded(x: jax.Array, w: jax.Array,
                        b: Optional[jax.Array] = None, *,
                        activation: str = "swish", bm: int = 128,
                        bn: int = 128, bk: int = 128,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: Optional[bool] = None) -> jax.Array:
     """fused_dense with automatic (M, K, N) padding."""
+    interpret = default_interpret(interpret)
     m, n = x.shape[0], w.shape[1]
     xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
     wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
@@ -41,9 +48,10 @@ def fused_dense_padded(x: jax.Array, w: jax.Array,
 
 def dense_concat_matmul(parts: Sequence[jax.Array], w: jax.Array,
                         b: Optional[jax.Array] = None, *,
-                        activation: str = "swish", interpret: bool = True
-                        ) -> jax.Array:
+                        activation: str = "swish",
+                        interpret: Optional[bool] = None) -> jax.Array:
     """act(concat(parts, -1) @ w + b) without materializing the concat."""
+    interpret = default_interpret(interpret)
     offs, acc = 0, None
     for i, part in enumerate(parts):
         k = part.shape[-1]

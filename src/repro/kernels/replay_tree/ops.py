@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.replay_tree import ref
-from repro.kernels.replay_tree.replay_tree import tree_sample, tree_set
+from repro.kernels.replay_tree.replay_tree import (tree_sample, tree_set,
+                                                   tree_set_onehot)
 
 BACKENDS = ("xla", "pallas")
 
@@ -39,13 +40,17 @@ def sumtree_set(tree: jax.Array, idx: jax.Array, value: jax.Array, *,
                 backend: str = "xla", interpret: bool = True) -> jax.Array:
     """Write ``value`` at leaves ``idx`` and refresh ancestor sums.
 
-    The Pallas set kernel is interpret-mode only: its scatter does not lower
-    on Mosaic, so ``backend="pallas", interpret=False`` (real TPU) routes to
-    the XLA scatter fallback — sampling keeps the fused kernel either way.
+    ``backend="pallas"`` under interpret mode runs the scatter+resum kernel
+    (scatter does not lower on Mosaic); real-lowering (TPU) routes to
+    ``tree_set_onehot``, which rewrites the scatter as per-level one-hot
+    matmul delta propagation — so on hardware both the sample descent AND
+    the priority refresh stay fused Pallas kernels.
     """
     assert backend in BACKENDS, backend
-    if backend == "pallas" and interpret:
-        return tree_set(tree, idx, value, interpret=True)
+    if backend == "pallas":
+        if interpret:
+            return tree_set(tree, idx, value, interpret=True)
+        return tree_set_onehot(tree, idx, value, interpret=False)
     return ref.tree_set_ref(tree, idx, value)
 
 

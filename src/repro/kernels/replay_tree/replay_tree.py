@@ -10,12 +10,18 @@ the importance-weight computation needs no second gather round-trip.
 
 ``tree_set`` is the write side: scatter a batch of leaf priorities and
 recompute the ancestor partial sums bottom-up, aliasing the tree in/out so
-the update is in-place.  Scatter does not lower on Mosaic today, so this
-kernel is the interpret-mode/CPU path — on TPU hardware ``ops.sumtree_set``
-defaults to the XLA scatter fallback (``ref.tree_set_ref``) while sampling
-keeps the fused Pallas path.
+the update is in-place.  Scatter does not lower on Mosaic, so ``tree_set``
+stays the interpret-mode/CPU reference; ``tree_set_onehot`` is the
+TPU-lowerable twin that expresses the same update scatter-free: write a
+batch of leaf *deltas* (new - old, duplicate indices masked keep-last) and
+propagate each delta to its ancestor at every level with a one-hot matmul
+``delta @ (node_id == iota)`` — wide levels are walked in lane-aligned
+chunks via ``fori_loop`` + dynamic stores.  ``ops.sumtree_set`` routes
+``backend="pallas"`` to the scatter kernel under interpret mode and to the
+one-hot kernel when real-lowering, so sampling AND priority refresh are both
+fused on hardware.
 
-Both kernels are validated in interpret mode against ``ref.py`` in
+All kernels are validated in interpret mode against ``ref.py`` in
 tests/test_kernels.py, following the dense_block/ssd_scan layout.
 """
 from __future__ import annotations
@@ -104,6 +110,75 @@ def tree_set(tree: jax.Array, idx: jax.Array, value: jax.Array, *,
     (n,) = idx.shape
     return pl.pallas_call(
         functools.partial(_set_kernel, depth=depth),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, size), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, size), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, size), tree.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(tree.reshape(1, size), idx.reshape(1, n).astype(jnp.int32),
+      value.reshape(1, n))[0]
+
+
+def _set_onehot_kernel(tree_ref, idx_ref, val_ref, out_ref, *, depth: int,
+                       chunk: int):
+    size = 1 << depth
+    half = size // 2
+    tree = tree_ref[0, :]
+    out_ref[0, :] = tree
+    idx = idx_ref[0, :]
+    n = idx.shape[0]
+    leaf = idx + half
+    old = jnp.take(tree, leaf)
+    # keep-LAST duplicate semantics (the host SumTree's): mask every write
+    # that has a later duplicate, then deltas of distinct leaves sum freely
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    later_dup = (idx[:, None] == idx[None, :]) & (jj > ii)
+    keep = jnp.logical_not(jnp.any(later_dup, axis=1))
+    delta = ((val_ref[0, :].astype(jnp.float32) - old)
+             * keep.astype(jnp.float32)).reshape(1, n)
+    for lvl in range(depth - 1, -1, -1):       # leaves -> root
+        s = 1 << lvl
+        rel = (leaf >> (depth - 1 - lvl)) - s  # node ids within the level
+        if s <= chunk:
+            oh = (rel[:, None] ==
+                  jax.lax.broadcasted_iota(jnp.int32, (n, s), 1))
+            out_ref[0, s:2 * s] += jax.lax.dot_general(
+                delta, oh.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)[0]
+        else:                                  # wide level: chunked columns
+            def body(c, _):
+                col0 = c * chunk
+                oh = (rel[:, None] == col0 + jax.lax.broadcasted_iota(
+                    jnp.int32, (n, chunk), 1))
+                out_ref[0, pl.ds(s + col0, chunk)] += jax.lax.dot_general(
+                    delta, oh.astype(jnp.float32), (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)[0]
+                return 0
+            jax.lax.fori_loop(0, s // chunk, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "chunk"))
+def tree_set_onehot(tree: jax.Array, idx: jax.Array, value: jax.Array, *,
+                    interpret: bool = True, chunk: int = 1024) -> jax.Array:
+    """Scatter-free ``tree_set``: per-level one-hot matmul delta propagation.
+
+    Mathematically identical to ``tree_set``/``ref.tree_set_ref`` with
+    keep-last duplicate resolution; lowers on Mosaic because the only data
+    movement is dense matmuls and (dynamic-)sliced adds. ``chunk`` bounds
+    the one-hot tile width for wide levels (must be a power of two).
+    """
+    size = tree.shape[0]
+    depth = size.bit_length() - 1
+    (n,) = idx.shape
+    assert chunk & (chunk - 1) == 0, chunk
+    return pl.pallas_call(
+        functools.partial(_set_onehot_kernel, depth=depth, chunk=chunk),
         grid=(1,),
         in_specs=[
             pl.BlockSpec((1, size), lambda i: (0, 0)),

@@ -9,6 +9,10 @@ paper ablation is reachable through ``RunConfig`` flags:
 * ``distributed``            — Ape-X actor pool vs 1-step loop   (Figs. 8/12)
 * ``algo``                   — sac | td3                         (Fig. 9)
 * ``prioritized``            — PER vs uniform replay
+* ``block_backend``          — "jnp" | "fused": route every MLP block
+  (actor, twin critics, OFENet online/target) through the fused streaming
+  DenseNet-stack kernel (``kernels/dense_block/stack.py``, custom VJP) so
+  the scanned superstep trains through it; "jnp" is the concat loop
 * ``replay_backend``         — host (NumPy sum-tree) | device (repro.replay)
   with ``replay_kernel`` picking the device sum-tree impl ("xla" | "pallas")
 * ``n_step``                 — Ape-X n-step returns (1 | 3), computed on
@@ -76,6 +80,7 @@ class RunConfig:
     num_layers: int = 2
     connectivity: str = "densenet"
     activation: str = "swish"
+    block_backend: str = "jnp"       # jnp | fused (stack kernel, blocks.py)
     use_ofenet: bool = True
     ofenet_units: int = 64
     ofenet_layers: int = 4
@@ -105,11 +110,12 @@ def _build(cfg: RunConfig, env: EnvSpec):
         ofe_cfg = OFENetConfig(state_dim=env.obs_dim, action_dim=env.act_dim,
                                num_layers=cfg.ofenet_layers,
                                num_units=cfg.ofenet_units,
-                               connectivity="densenet", batch_norm=False)
+                               connectivity="densenet", batch_norm=False,
+                               block_backend=cfg.block_backend)
     common = dict(obs_dim=env.obs_dim, act_dim=env.act_dim,
                   num_units=cfg.num_units, num_layers=cfg.num_layers,
                   connectivity=cfg.connectivity, activation=cfg.activation,
-                  ofenet=ofe_cfg)
+                  block_backend=cfg.block_backend, ofenet=ofe_cfg)
     if cfg.algo == "sac":
         acfg = sac_mod.SACConfig(**common)
 

@@ -37,6 +37,7 @@ class SACConfig:
     lr: float = 3e-4
     init_alpha: float = 0.1
     huber: bool = True                 # paper A.1
+    block_backend: str = "jnp"         # jnp | fused stack kernel (blocks.py)
     ofenet: Optional[OFENetConfig] = None
 
     @property
@@ -52,13 +53,15 @@ class SACConfig:
         return MLPBlockConfig(
             in_dim=self.z_s_dim, num_layers=self.num_layers,
             num_units=self.num_units, connectivity=self.connectivity,
-            activation=self.activation, out_dim=2 * self.act_dim)
+            activation=self.activation, out_dim=2 * self.act_dim,
+            backend=self.block_backend)
 
     def critic_block(self) -> MLPBlockConfig:
         return MLPBlockConfig(
             in_dim=self.z_sa_dim, num_layers=self.num_layers,
             num_units=self.num_units, connectivity=self.connectivity,
-            activation=self.activation, out_dim=1)
+            activation=self.activation, out_dim=1,
+            backend=self.block_backend)
 
 
 def sac_init(key: PRNGKey, cfg: SACConfig) -> Params:

@@ -35,6 +35,7 @@ class TD3Config:
     policy_delay: int = 2
     expl_noise: float = 0.1
     huber: bool = True
+    block_backend: str = "jnp"         # jnp | fused stack kernel (blocks.py)
     ofenet: Optional[OFENetConfig] = None
 
     @property
@@ -51,13 +52,14 @@ class TD3Config:
             in_dim=self.z_s_dim, num_layers=self.num_layers,
             num_units=self.num_units, connectivity=self.connectivity,
             activation=self.activation, out_dim=self.act_dim,
-            final_activation="tanh")
+            final_activation="tanh", backend=self.block_backend)
 
     def critic_block(self) -> MLPBlockConfig:
         return MLPBlockConfig(
             in_dim=self.z_sa_dim, num_layers=self.num_layers,
             num_units=self.num_units, connectivity=self.connectivity,
-            activation=self.activation, out_dim=1)
+            activation=self.activation, out_dim=1,
+            backend=self.block_backend)
 
 
 def td3_init(key: PRNGKey, cfg: TD3Config) -> Params:

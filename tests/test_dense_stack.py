@@ -1,0 +1,207 @@
+"""Fused streaming DenseNet-stack backend parity.
+
+Three layers of guarantees, mirroring the acceptance criteria:
+
+* ``dense_stack`` (XLA streaming twin AND Pallas kernels in interpret mode)
+  matches the jnp concat-loop oracle — forward and grads — for every fused
+  connectivity, with lane-unaligned dims so the padding marshalling is hit.
+* ``mlp_block_apply(backend="fused")`` matches ``backend="jnp"`` outputs,
+  features and parameter/input grads, with and without ``out_dim``, and
+  falls back (identically) where the kernel does not apply (BN, resnet).
+* The paper-scale densenet config (L=8, U=256) meets the 1e-4 fwd / 1e-3
+  grad tolerance bar end to end.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blocks import MLPBlockConfig, mlp_block_apply, mlp_block_init
+from repro.kernels.dense_block.stack import dense_stack, dense_stack_ref
+
+CONNS = ("densenet", "d2rl", "mlp")
+
+
+def _make_stack(conn, L=3, d0=5, u=8, m=9, seed=0):
+    key = jax.random.key(seed)
+    ks = jax.random.split(key, 2 * L + 2)
+    x = jax.random.normal(ks[0], (m, d0))
+    dims, d = [], d0
+    for _ in range(L):
+        dims.append(d)
+        d = d + u if conn == "densenet" else (u + d0 if conn == "d2rl" else u)
+    ws = tuple(jax.random.normal(ks[1 + i], (dims[i], u)) * 0.3
+               for i in range(L))
+    bs = tuple(jax.random.normal(ks[1 + L + i], (u,)) * 0.3 for i in range(L))
+    return x, ws, bs
+
+
+@pytest.mark.parametrize("conn", CONNS)
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_dense_stack_forward_matches_ref(conn, impl):
+    x, ws, bs = _make_stack(conn)
+    ref = dense_stack_ref(x, ws, bs, connectivity=conn)
+    out = dense_stack(x, ws, bs, connectivity=conn, impl=impl, block_m=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("conn", CONNS)
+@pytest.mark.parametrize("impl,remat", [("xla", False), ("xla", True),
+                                        ("pallas", False)])
+def test_dense_stack_grads_match_ref(conn, impl, remat):
+    x, ws, bs = _make_stack(conn)
+    v = jax.random.normal(jax.random.key(1),
+                          dense_stack_ref(x, ws, bs,
+                                          connectivity=conn).shape)
+
+    def loss_fused(x, ws, bs):
+        return jnp.mean(dense_stack(x, ws, bs, connectivity=conn, impl=impl,
+                                    remat=remat, block_m=8) * v)
+
+    def loss_ref(x, ws, bs):
+        return jnp.mean(dense_stack_ref(x, ws, bs, connectivity=conn) * v)
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2))(x, ws, bs)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, ws, bs)
+    for a, b in zip(jax.tree_util.tree_leaves(gf),
+                    jax.tree_util.tree_leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_dense_stack_under_jit_and_vmap():
+    """The fused stack must compose with jit and vmap (the eval rollout
+    vmaps the policy, which runs the block apply inside)."""
+    x, ws, bs = _make_stack("densenet", m=6)
+    ref = dense_stack_ref(x, ws, bs)
+    out = jax.jit(lambda x: dense_stack(x, ws, bs))(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+    out_v = jax.vmap(lambda xi: dense_stack(xi, ws, bs))(x.reshape(2, 3, -1))
+    np.testing.assert_allclose(np.asarray(out_v.reshape(6, -1)),
+                               np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------- mlp_block_apply(backend=...)
+
+def _block_cfg(conn, out_dim, backend, **kw):
+    base = dict(in_dim=6, num_layers=3, num_units=8, connectivity=conn,
+                activation="swish", batch_norm=False, out_dim=out_dim,
+                backend=backend)
+    base.update(kw)
+    return MLPBlockConfig(**base)
+
+
+@pytest.mark.parametrize("conn", CONNS)
+@pytest.mark.parametrize("out_dim", [None, 4])
+def test_fused_block_backend_matches_jnp(conn, out_dim):
+    cfg_j = _block_cfg(conn, out_dim, "jnp")
+    cfg_f = _block_cfg(conn, out_dim, "fused")
+    params = mlp_block_init(jax.random.key(2), cfg_j)
+    x = jax.random.normal(jax.random.key(3), (12, cfg_j.in_dim))
+    out_j, feat_j, p_j = mlp_block_apply(params, cfg_j, x)
+    out_f, feat_f, p_f = mlp_block_apply(params, cfg_f, x)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_j),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(feat_f), np.asarray(feat_j),
+                               rtol=1e-5, atol=1e-6)
+    # no-BN path returns params unchanged — the SAME pytree, no dict churn
+    assert p_f is params and p_j is params
+
+    def loss(fn_cfg):
+        def f(params, x):
+            out, _, _ = mlp_block_apply(params, fn_cfg, x)
+            return jnp.mean(out ** 2)
+        return f
+
+    g_j = jax.grad(loss(cfg_j), argnums=(0, 1))(params, x)
+    g_f = jax.grad(loss(cfg_f), argnums=(0, 1))(params, x)
+    for a, b in zip(jax.tree_util.tree_leaves(g_f),
+                    jax.tree_util.tree_leaves(g_j)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-6)
+
+
+@pytest.mark.parametrize("kw", [dict(batch_norm=True),
+                                dict(connectivity="resnet"),
+                                dict(activation="gelu"),
+                                dict(num_layers=0)])
+def test_fused_backend_falls_back_where_unsupported(kw):
+    """BN / resnet / gelu / empty stacks route to the jnp loop untouched."""
+    cfg_f = _block_cfg("densenet", None, "fused", **{
+        k: v for k, v in kw.items() if k != "connectivity"},
+        **({"connectivity": kw["connectivity"]}
+           if "connectivity" in kw else {}))
+    assert not cfg_f.fused_supported
+    cfg_j = dataclasses.replace(cfg_f, backend="jnp")
+    params = mlp_block_init(jax.random.key(4), cfg_f)
+    x = jax.random.normal(jax.random.key(5), (7, cfg_f.in_dim))
+    out_f, feat_f, _ = mlp_block_apply(params, cfg_f, x, train=False)
+    out_j, feat_j, _ = mlp_block_apply(params, cfg_j, x, train=False)
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_j))
+    np.testing.assert_array_equal(np.asarray(feat_f), np.asarray(feat_j))
+
+
+def test_fused_acceptance_tolerances_paper_scale():
+    """Acceptance bar: densenet L=8/U=256 fused-vs-jnp <=1e-4 fwd, <=1e-3
+    grads (relative, well-scaled loss)."""
+    cfg_j = MLPBlockConfig(in_dim=111, num_layers=8, num_units=256,
+                           connectivity="densenet", activation="swish",
+                           batch_norm=False, backend="jnp")
+    cfg_f = dataclasses.replace(cfg_j, backend="fused")
+    params = mlp_block_init(jax.random.key(6), cfg_j)
+    x = jax.random.normal(jax.random.key(7), (64, 111))
+    out_j, _, _ = mlp_block_apply(params, cfg_j, x)
+    out_f, _, _ = mlp_block_apply(params, cfg_f, x)
+    scale = float(np.abs(np.asarray(out_j)).max())
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_j),
+                               rtol=1e-4, atol=1e-4 * scale)
+
+    def loss(cfg):
+        def f(params, x):
+            out, _, _ = mlp_block_apply(params, cfg, x)
+            return jnp.mean(out ** 2)
+        return f
+
+    g_j = jax.grad(loss(cfg_j), argnums=(0, 1))(params, x)
+    g_f = jax.grad(loss(cfg_f), argnums=(0, 1))(params, x)
+    for a, b in zip(jax.tree_util.tree_leaves(g_f),
+                    jax.tree_util.tree_leaves(g_j)):
+        a, b = np.asarray(a), np.asarray(b)
+        np.testing.assert_allclose(a, b, rtol=1e-3,
+                                   atol=1e-3 * max(np.abs(b).max(), 1e-8))
+
+
+def test_sac_update_fused_matches_jnp():
+    """One full SAC gradient step (actor + twin critics + OFENet) through
+    the fused backend stays within float32-reassociation distance."""
+    from repro.core.ofenet import OFENetConfig
+    from repro.rl import sac
+
+    def make(backend):
+        ofe = OFENetConfig(state_dim=6, action_dim=2, num_layers=2,
+                           num_units=16, batch_norm=False,
+                           block_backend=backend)
+        return sac.SACConfig(obs_dim=6, act_dim=2, num_units=16,
+                             num_layers=2, block_backend=backend, ofenet=ofe)
+
+    cfg_j, cfg_f = make("jnp"), make("fused")
+    state = sac.sac_init(jax.random.key(8), cfg_j)
+    key = jax.random.key(9)
+    batch = {"obs": jax.random.normal(key, (16, 6)),
+             "act": jnp.tanh(jax.random.normal(key, (16, 2))),
+             "rew": jax.random.normal(key, (16,)),
+             "next_obs": jax.random.normal(key, (16, 6)),
+             "done": jnp.zeros((16,))}
+    s_j, m_j = sac.sac_update(state, cfg_j, batch, key)
+    s_f, m_f = sac.sac_update(state, cfg_f, batch, key)
+    np.testing.assert_allclose(np.asarray(m_f["critic_loss"]),
+                               np.asarray(m_j["critic_loss"]),
+                               rtol=1e-4, atol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(s_f["params"]),
+                    jax.tree_util.tree_leaves(s_j["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)

@@ -16,7 +16,8 @@ from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.replay_tree import ops as rt_ops
 from repro.kernels.replay_tree import ref as rt_ref
-from repro.kernels.replay_tree.replay_tree import tree_sample, tree_set
+from repro.kernels.replay_tree.replay_tree import (tree_sample, tree_set,
+                                                   tree_set_onehot)
 from repro.kernels.ssd_scan.ops import ssd_chunked_kernel
 from repro.kernels.ssd_scan.ssd_scan import ssd_chunk_dual
 from repro.kernels.ssd_scan.ref import ssd_chunk_dual_ref
@@ -197,6 +198,43 @@ def test_replay_tree_sample_kernel_matches_ref(capacity, bt):
     np.testing.assert_array_equal(np.asarray(leaf_k), np.asarray(leaf_r))
     np.testing.assert_allclose(np.asarray(pri_k),
                                np.asarray(pr)[np.asarray(leaf_k)], rtol=1e-6)
+
+
+@pytest.mark.parametrize("capacity,chunk", [(5, 1024), (37, 1024), (64, 16),
+                                            (200, 1024), (3000, 1024)])
+def test_replay_tree_set_onehot_matches_ref(capacity, chunk):
+    """The TPU-lowerable scatter-free tree_set == jnp oracle; capacity 3000
+    (tree size 8192) and chunk 16 exercise the chunked wide-level loop."""
+    rng = np.random.default_rng(13)
+    pr = jnp.asarray(rng.uniform(0.1, 5.0, capacity), jnp.float32)
+    idx = jnp.arange(capacity)
+    t_k = tree_set_onehot(rt_ref.tree_init_ref(capacity), idx, pr,
+                          chunk=chunk)
+    t_r = rt_ref.tree_set_ref(rt_ref.tree_init_ref(capacity), idx, pr)
+    np.testing.assert_allclose(np.asarray(t_k), np.asarray(t_r), rtol=1e-5,
+                               atol=1e-6)
+    sub = jnp.asarray(rng.integers(0, capacity, 9))
+    val = jnp.asarray(rng.uniform(0.1, 9.0, 9), jnp.float32)
+    np.testing.assert_allclose(np.asarray(tree_set_onehot(t_k, sub, val,
+                                                          chunk=chunk)),
+                               np.asarray(rt_ref.tree_set_ref(t_r, sub, val)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_replay_tree_set_onehot_duplicate_keep_last():
+    """Duplicate leaf writes resolve keep-last, the host SumTree semantic."""
+    capacity = 11
+    base = rt_ref.tree_set_ref(rt_ref.tree_init_ref(capacity),
+                               jnp.arange(capacity),
+                               jnp.ones((capacity,), jnp.float32))
+    idx = jnp.asarray([3, 7, 3, 7, 3], jnp.int32)
+    val = jnp.asarray([10.0, 20.0, 30.0, 40.0, 50.0], jnp.float32)
+    tree = tree_set_onehot(base, idx, val)
+    leaves = np.asarray(rt_ref.tree_get_ref(tree, jnp.arange(capacity)))
+    assert leaves[3] == 50.0 and leaves[7] == 40.0
+    expect_total = capacity - 2 + 50.0 + 40.0
+    np.testing.assert_allclose(float(rt_ref.tree_total_ref(tree)),
+                               expect_total, rtol=1e-6)
 
 
 @pytest.mark.parametrize("backend", ["xla", "pallas"])

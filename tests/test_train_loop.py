@@ -55,6 +55,31 @@ def test_scan_matches_python_loop_sranks():
     np.testing.assert_allclose(r_sc.returns, r_py.returns, rtol=1e-4)
 
 
+def test_scan_superstep_fused_block_backend_matches_jnp(monkeypatch):
+    """block_backend="fused" routes every MLP block through the streaming
+    stack kernel inside the scanned superstep, seed-for-seed with jnp (the
+    fused path is float32-reassociation-identical at this scale)."""
+    from repro.kernels.dense_block import stack as stack_mod
+    calls = {"n": 0}
+    inner = stack_mod.dense_stack
+
+    def counted(*a, **k):
+        calls["n"] += 1
+        return inner(*a, **k)
+    monkeypatch.setattr(stack_mod, "dense_stack", counted)
+
+    cfg = dict(_BASE, replay_backend="device", use_ofenet=True,
+               ofenet_layers=2, ofenet_units=16, loop="scan")
+    r_jnp = run_training(RunConfig(**cfg, block_backend="jnp"))
+    assert calls["n"] == 0                     # jnp backend never routes here
+    r_fused = run_training(RunConfig(**cfg, block_backend="fused"))
+    assert calls["n"] > 0                      # fused path actually traced
+    np.testing.assert_allclose(r_fused.returns, r_jnp.returns, rtol=1e-3)
+    np.testing.assert_allclose(r_fused.last_priorities, r_jnp.last_priorities,
+                               rtol=5e-3, atol=1e-4)
+    assert r_fused.eval_steps == r_jnp.eval_steps
+
+
 def test_scan_matches_python_loop_pallas_kernel():
     """Loop driver parity must hold through the Pallas sum-tree too."""
     cfg = dict(_BASE, total_steps=6, eval_every=6, replay_capacity=128,
