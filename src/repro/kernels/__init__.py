@@ -18,8 +18,13 @@ from typing import Optional
 import jax
 
 
+def mosaic_available() -> bool:
+    """True when Pallas kernels can real-lower (Mosaic is TPU-only)."""
+    return jax.default_backend() == "tpu"
+
+
 def default_interpret(interpret: Optional[bool] = None) -> bool:
     """Resolve an ``interpret`` argument: None -> interpret off-TPU only."""
     if interpret is None:
-        return jax.default_backend() != "tpu"
+        return not mosaic_available()
     return bool(interpret)

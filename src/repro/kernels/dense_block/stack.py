@@ -199,6 +199,14 @@ class _StackPlan:
     def pad_trivial(self) -> bool:
         return self.d0p == self.d0 and self.up == self.u
 
+    def rows_identity(self, i: int) -> bool:
+        """True iff layer i's padded row layout equals the logical order.
+
+        False for d2rl layers past the first even when ``pad_trivial``:
+        logical rows are [h | x] but the accumulator streams [x | h].
+        """
+        return all(dst == src for dst, src, _n in self.w_rowmap(i))
+
 
 # ---------------------------------------------------------------------------
 # jnp-loop reference oracle (mirrors core.blocks.mlp_block_apply, no BN)
@@ -458,7 +466,8 @@ def _pad_x(plan: _StackPlan, x):
 
 
 def _pad_w(plan: _StackPlan, i: int, w):
-    if plan.pad_trivial and w.shape == (plan.in_w(i), plan.up):
+    if (plan.pad_trivial and plan.rows_identity(i)
+            and w.shape == (plan.in_w(i), plan.up)):
         return w
     out = jnp.zeros((plan.in_w(i), plan.up), w.dtype)
     for dst, src, n in plan.w_rowmap(i):
@@ -467,7 +476,8 @@ def _pad_w(plan: _StackPlan, i: int, w):
 
 
 def _unpad_dw(plan: _StackPlan, i: int, dwp):
-    if plan.pad_trivial and dwp.shape == (plan.in_dim(i), plan.u):
+    if (plan.pad_trivial and plan.rows_identity(i)
+            and dwp.shape == (plan.in_dim(i), plan.u)):
         return dwp
     segs = sorted(plan.w_rowmap(i), key=lambda s: s[1])   # logical row order
     return jnp.concatenate(

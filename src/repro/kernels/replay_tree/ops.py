@@ -15,6 +15,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import mosaic_available
 from repro.kernels.replay_tree import ref
 from repro.kernels.replay_tree.replay_tree import (tree_sample, tree_set,
                                                    tree_set_onehot)
@@ -41,12 +42,18 @@ def sumtree_set(tree: jax.Array, idx: jax.Array, value: jax.Array, *,
     """Write ``value`` at leaves ``idx`` and refresh ancestor sums.
 
     ``backend="pallas"`` under interpret mode runs the scatter+resum kernel
-    (scatter does not lower on Mosaic); real-lowering (TPU) routes to
+    (scatter does not lower on Mosaic); real-lowering on TPU routes to
     ``tree_set_onehot``, which rewrites the scatter as per-level one-hot
     matmul delta propagation — so on hardware both the sample descent AND
-    the priority refresh stay fused Pallas kernels.
+    the priority refresh stay fused Pallas kernels. Off-TPU with
+    ``interpret=False`` there is no Mosaic to lower against, so this falls
+    back to the XLA scatter ref rather than failing to compile. (CI runs
+    the one-hot kernel in interpret mode only; its hardware lowering is
+    pending a TPU smoke job — see ROADMAP.)
     """
     assert backend in BACKENDS, backend
+    if backend == "pallas" and not interpret and not mosaic_available():
+        backend = "xla"
     if backend == "pallas":
         if interpret:
             return tree_set(tree, idx, value, interpret=True)
@@ -62,10 +69,15 @@ def sumtree_sample(tree: jax.Array, targets: jax.Array, *, capacity: int,
     """Batch proportional descent -> (leaf_idx, leaf_priority).
 
     Targets are padded up to a multiple of the kernel's batch tile ``bt``;
-    the pad lanes descend with target 0 and are sliced off.
+    the pad lanes descend with target 0 and are sliced off. As with
+    ``sumtree_set``, ``interpret=False`` off-TPU falls back to the jnp ref
+    (real lowering needs Mosaic) so the pallas backend stays runnable
+    end-to-end on CPU hosts.
     """
     assert backend in BACKENDS, backend
     (b,) = targets.shape
+    if backend == "pallas" and not interpret and not mosaic_available():
+        backend = "xla"
     if backend == "pallas":
         pad = (-b) % bt
         tp = jnp.pad(targets, (0, pad)) if pad else targets

@@ -72,6 +72,32 @@ def test_dense_stack_grads_match_ref(conn, impl, remat):
                                    rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.parametrize("conn", CONNS)
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_dense_stack_lane_aligned_matches_ref(conn, impl):
+    """d0=u=128 takes the pad-trivial fast path; d2rl layers must still get
+    the [h|x] -> [x|h] row-segment reorder (fwd and dW)."""
+    x, ws, bs = _make_stack(conn, L=3, d0=128, u=128, m=16, seed=11)
+    ref = dense_stack_ref(x, ws, bs, connectivity=conn)
+    out = dense_stack(x, ws, bs, connectivity=conn, impl=impl, block_m=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    v = jax.random.normal(jax.random.key(12), ref.shape)
+
+    def loss(fn):
+        return lambda x, ws, bs: jnp.mean(fn(x, ws, bs) * v)
+
+    gf = jax.grad(loss(lambda x, ws, bs: dense_stack(
+        x, ws, bs, connectivity=conn, impl=impl, block_m=16)),
+        argnums=(0, 1, 2))(x, ws, bs)
+    gr = jax.grad(loss(lambda x, ws, bs: dense_stack_ref(
+        x, ws, bs, connectivity=conn)), argnums=(0, 1, 2))(x, ws, bs)
+    for a, b in zip(jax.tree_util.tree_leaves(gf),
+                    jax.tree_util.tree_leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
+
+
 def test_dense_stack_under_jit_and_vmap():
     """The fused stack must compose with jit and vmap (the eval rollout
     vmaps the policy, which runs the block apply inside)."""

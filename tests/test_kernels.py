@@ -259,6 +259,32 @@ def test_replay_tree_ops_match_host_sumtree(backend):
     assert np.asarray(leaf).min() >= 0 and np.asarray(leaf).max() < capacity
 
 
+def test_replay_tree_pallas_interpret_off_runs_off_tpu():
+    """backend='pallas', interpret=False off-TPU must fall back to the jnp
+    ref (Mosaic-only lowering) for BOTH the set and sample sites, so a
+    DeviceReplayConfig pinned to real lowering stays runnable on CPU."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("off-TPU fallback path")
+    capacity = 41
+    rng = np.random.default_rng(14)
+    pr = jnp.asarray(rng.uniform(0.1, 3.0, capacity), jnp.float32)
+    tree = rt_ops.sumtree_set(rt_ops.sumtree_init(capacity),
+                              jnp.arange(capacity), pr,
+                              backend="pallas", interpret=False)
+    ref_tree = rt_ref.tree_set_ref(rt_ref.tree_init_ref(capacity),
+                                   jnp.arange(capacity), pr)
+    np.testing.assert_allclose(np.asarray(tree), np.asarray(ref_tree),
+                               rtol=1e-6)
+    targets = jnp.asarray(
+        rng.uniform(0, float(rt_ops.sumtree_total(tree)), 64), jnp.float32)
+    leaf, pri = rt_ops.sumtree_sample(tree, targets, capacity=capacity,
+                                      backend="pallas", interpret=False)
+    leaf_r = rt_ref.tree_sample_ref(ref_tree, targets, capacity=capacity)
+    np.testing.assert_array_equal(np.asarray(leaf), np.asarray(leaf_r))
+    np.testing.assert_allclose(np.asarray(pri),
+                               np.asarray(pr)[np.asarray(leaf)], rtol=1e-6)
+
+
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
 def test_replay_tree_sample_edge_targets_clamped(backend):
     """target == total (and beyond) stays inside [0, capacity)."""
