@@ -3,15 +3,12 @@ w/o DenseNet, vs original SAC.
 
 Quick: pendulum with "large" = 128 units (paper: Ant-v2, 2048).
 """
-from benchmarks.common import bench_run, make_cfg
+from benchmarks.common import bench_run, make_spec
 
 
 def run(scale: str = "quick"):
     big = 128 if scale == "quick" else 2048
     small = 32 if scale == "quick" else 256
-    base = dict(env="pendulum", algo="sac", num_layers=2, num_units=big,
-                connectivity="densenet", use_ofenet=True, distributed=True,
-                n_core=2, n_env=16)
     variants = {
         "fig10_full": {},
         "fig10_wo_apex": {"distributed": False, "n_env": 1},
@@ -24,8 +21,8 @@ def run(scale: str = "quick"):
     }
     rows = []
     for name, ov in variants.items():
-        cfg = make_cfg(scale, **{**base, **ov})
-        rows.append(bench_run(name, cfg, seeds=2))
+        spec = make_spec(scale, "fig10-ablation", **{"num_units": big, **ov})
+        rows.append(bench_run(name, spec, seeds=2))
     return rows
 
 

@@ -1,14 +1,12 @@
 """Fig. 13: Swish vs ReLU activations for the DenseNet policy/value nets."""
-from benchmarks.common import bench_run, make_cfg
+from benchmarks.common import bench_run, make_spec
 
 
 def run(scale: str = "quick"):
     rows = []
     for act in ("swish", "relu"):
-        cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=64,
-                       num_layers=2, connectivity="densenet",
-                       activation=act, use_ofenet=True, distributed=False)
-        rows.append(bench_run(f"fig13_{act}", cfg, {"activation": act}))
+        spec = make_spec(scale, "fig13-activation", activation=act)
+        rows.append(bench_run(f"fig13_{act}", spec, {"activation": act}))
     return rows
 
 

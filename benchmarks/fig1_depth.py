@@ -6,7 +6,7 @@ Quick: pendulum, units=32, layers in {1, 2, 4}, sharpness at depth 1 vs 4.
 """
 from __future__ import annotations
 
-from benchmarks.common import bench_run, make_cfg
+from benchmarks.common import bench_run, make_spec
 
 
 def run(scale: str = "quick"):
@@ -15,10 +15,9 @@ def run(scale: str = "quick"):
     env = "pendulum" if scale == "quick" else "cartpole_swingup"
     rows = []
     for nl in layers:
-        cfg = make_cfg(scale, env=env, algo="sac", num_units=units,
-                       num_layers=nl, connectivity="mlp", use_ofenet=False,
-                       distributed=False, srank_every=150)
-        rows.append(bench_run(f"fig1_depth_L{nl}", cfg, {"layers": nl}))
+        spec = make_spec(scale, "fig1-depth", env=env, num_units=units,
+                         num_layers=nl)
+        rows.append(bench_run(f"fig1_depth_L{nl}", spec, {"layers": nl}))
     return rows
 
 

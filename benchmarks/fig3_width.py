@@ -2,17 +2,15 @@
 
 Paper: Ant-v2, layers=2, units in {128..2048}. Quick: pendulum, {16,64,256}.
 """
-from benchmarks.common import bench_run, make_cfg
+from benchmarks.common import bench_run, make_spec
 
 
 def run(scale: str = "quick"):
     units = [16, 64, 256] if scale == "quick" else [128, 256, 512, 1024, 2048]
     rows = []
     for nu in units:
-        cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=nu,
-                       num_layers=2, connectivity="mlp", use_ofenet=False,
-                       distributed=False, srank_every=150)
-        rows.append(bench_run(f"fig3_width_U{nu}", cfg, {"units": nu}))
+        spec = make_spec(scale, "fig3-width", num_units=nu)
+        rows.append(bench_run(f"fig3_width_U{nu}", spec, {"units": nu}))
     return rows
 
 

@@ -2,7 +2,7 @@
 
 Paper: 5x5 grid on Ant-v2. Quick: 2x2 {32,128} x {1,4} on pendulum.
 """
-from benchmarks.common import bench_run, make_cfg
+from benchmarks.common import bench_run, make_spec
 
 
 def run(scale: str = "quick"):
@@ -11,10 +11,9 @@ def run(scale: str = "quick"):
     rows = []
     for nu in units:
         for nl in layers:
-            cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=nu,
-                           num_layers=nl, connectivity="mlp",
-                           use_ofenet=False, distributed=False)
-            rows.append(bench_run(f"fig4_grid_U{nu}_L{nl}", cfg,
+            spec = make_spec(scale, "fig4-grid", num_units=nu,
+                             num_layers=nl)
+            rows.append(bench_run(f"fig4_grid_U{nu}_L{nl}", spec,
                                   {"units": nu, "layers": nl}))
     return rows
 

@@ -3,7 +3,7 @@ and large networks, with effective rank of the Q features.
 
 Paper: Ant-v2, S=128 / L=2048 units. Quick: pendulum, S=32 / L=128.
 """
-from benchmarks.common import bench_run, make_cfg
+from benchmarks.common import bench_run, make_spec
 
 
 def run(scale: str = "quick"):
@@ -11,10 +11,9 @@ def run(scale: str = "quick"):
     rows = []
     for tag, nu in sizes.items():
         for conn in ("mlp", "resnet", "densenet", "d2rl"):
-            cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=nu,
-                           num_layers=2, connectivity=conn, use_ofenet=False,
-                           distributed=False, srank_every=150)
-            rows.append(bench_run(f"fig5_{conn}_{tag}", cfg,
+            spec = make_spec(scale, "fig5-connectivity", num_units=nu,
+                             connectivity=conn)
+            rows.append(bench_run(f"fig5_{conn}_{tag}", spec,
                                   {"connectivity": conn, "size": tag}))
     return rows
 

@@ -2,7 +2,7 @@
 
 Paper: Ant-v2, S/M/L = 256/1024/2048 units. Quick: pendulum S/L = 32/128.
 """
-from benchmarks.common import bench_run, make_cfg
+from benchmarks.common import bench_run, make_spec
 
 
 def run(scale: str = "quick"):
@@ -11,11 +11,10 @@ def run(scale: str = "quick"):
     rows = []
     for tag, nu in sizes.items():
         for ofe in (False, True):
-            cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=nu,
-                           num_layers=2, connectivity="densenet",
-                           use_ofenet=ofe, distributed=False, srank_every=150)
+            spec = make_spec(scale, "fig6-ofenet", num_units=nu,
+                             use_ofenet=ofe)
             name = f"fig6_{'ofenet' if ofe else 'scratch'}_{tag}"
-            rows.append(bench_run(name, cfg, {"ofenet": ofe, "size": tag}))
+            rows.append(bench_run(name, spec, {"ofenet": ofe, "size": tag}))
     return rows
 
 

@@ -3,7 +3,7 @@
 Paper: grid over SAC x OFENet units with N_core=2 x N_env=32 actors.
 Quick: pendulum, S/L nets, 16 actors vs 1.
 """
-from benchmarks.common import bench_run, make_cfg
+from benchmarks.common import bench_run, make_spec
 
 
 def run(scale: str = "quick"):
@@ -12,13 +12,11 @@ def run(scale: str = "quick"):
     rows = []
     for tag, nu in sizes.items():
         for dist in (False, True):
-            cfg = make_cfg(scale, env="pendulum", algo="sac", num_units=nu,
-                           num_layers=2, connectivity="densenet",
-                           use_ofenet=True, distributed=dist,
-                           n_core=2, n_env=16 if dist else 1)
+            spec = make_spec(scale, "fig8-distributed", num_units=nu,
+                             distributed=dist, n_env=16 if dist else 1)
             name = f"fig8_{'apex' if dist else 'single'}_{tag}"
-            rows.append(bench_run(name, cfg, {"distributed": dist,
-                                              "size": tag}))
+            rows.append(bench_run(name, spec, {"distributed": dist,
+                                               "size": tag}))
     return rows
 
 

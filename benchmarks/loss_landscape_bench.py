@@ -4,30 +4,28 @@ Trains a deep-narrow and a shallow-wide SAC agent, then measures the
 filter-normalized J_Q surface (paper A.3: frozen targets, replayed
 transitions, trained weights). Paper's claim: wide => flatter minimum.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def run(scale: str = "quick"):
-    from benchmarks.common import make_cfg
+    from benchmarks.common import make_spec
     from repro.core.loss_landscape import loss_surface, sharpness
+    from repro.rl import Experiment
     from repro.rl.envs import make_env
-    from repro.rl.runner import _build, run_training
+    from repro.rl.runner import _build
     from repro.rl.sac import q_values
 
     rows = []
     shapes = {"deep": dict(num_units=32, num_layers=6),
               "wide": dict(num_units=256, num_layers=2)}
     for tag, shp in shapes.items():
-        cfg = make_cfg(scale, env="pendulum", algo="sac",
-                       connectivity="mlp", use_ofenet=False,
-                       distributed=False, n_env=1, keep_state=True, **shp)
-        env = make_env(cfg.env)
-        acfg, *_ = _build(cfg, env)
-        res = run_training(cfg)
+        # fig4-grid is the plain-MLP single-actor scenario this study needs
+        spec = make_spec(scale, "fig4-grid", n_env=1, **shp)
+        env = make_env(spec.env)
+        acfg, *_ = _build(spec.to_run_config(), env)
+        res = Experiment.from_spec(spec).run(eval_at_end=True,
+                                             keep_last=True)
         state, batch = res.state, res.last_batch
 
         # frozen targets from the trained target critics (paper A.3 / eq. 2-3)

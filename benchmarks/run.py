@@ -6,8 +6,9 @@ are replaced, others are kept, so ``--only`` reruns never drop results).
 
   PYTHONPATH=src python -m benchmarks.run [--scale quick|paper] [--only fig5]
 
-``--smoke`` is the CI bitrot guard: one-rep runs of the kernel/loop
-benchmarks (dense_stack, loop_fusion) with failures fatal instead of
+``--smoke`` is the CI bitrot guard: the preset registry resolves and builds
+every paper scenario (presets_smoke), then one-rep runs of the kernel/loop
+benchmarks (dense_stack, loop_fusion) — failures fatal instead of
 swallowed, results written to experiments/bench_smoke.json.
 """
 import argparse
@@ -17,6 +18,7 @@ import time
 from pathlib import Path
 
 MODULES = [
+    "benchmarks.presets_smoke",
     "benchmarks.fig1_depth",
     "benchmarks.fig3_width",
     "benchmarks.fig4_grid",
@@ -34,7 +36,11 @@ MODULES = [
     "benchmarks.lm_substrate",
 ]
 
-SMOKE_MODULES = ["benchmarks.dense_stack", "benchmarks.loop_fusion"]
+# presets_smoke resolves every paper scenario through the preset registry
+# (construct + validate + build the Experiment, no jit) before the
+# kernel/loop one-rep runs
+SMOKE_MODULES = ["benchmarks.presets_smoke", "benchmarks.dense_stack",
+                 "benchmarks.loop_fusion"]
 
 
 def _merge_write(path: Path, rows) -> None:

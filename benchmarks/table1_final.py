@@ -4,7 +4,7 @@ environments.
 Paper: 5 MuJoCo locomotion tasks. Quick: 3 pure-JAX envs (DESIGN.md §7 —
 orderings are the reproduced claim, absolute returns are env-specific).
 """
-from benchmarks.common import bench_run, make_cfg
+from benchmarks.common import bench_run, make_spec
 
 
 def run(scale: str = "quick"):
@@ -14,16 +14,10 @@ def run(scale: str = "quick"):
     rows = []
     for env in envs:
         for algo in ("sac", "td3"):
-            ours = make_cfg(scale, env=env, algo=algo, num_units=128,
-                            num_layers=2, connectivity="densenet",
-                            use_ofenet=True, distributed=True,
-                            n_core=2, n_env=16)
+            ours = make_spec(scale, "table1-ours", env=env, algo=algo)
             rows.append(bench_run(f"table1_{env}_{algo}_ours", ours,
                                   {"env": env, "algo": algo, "kind": "ours"}))
-            orig = make_cfg(scale, env=env, algo=algo, num_units=32,
-                            num_layers=2, connectivity="mlp",
-                            activation="relu", use_ofenet=False,
-                            distributed=False, n_env=1)
+            orig = make_spec(scale, "table1-orig", env=env, algo=algo)
             rows.append(bench_run(f"table1_{env}_{algo}_orig", orig,
                                   {"env": env, "algo": algo, "kind": "orig"}))
     return rows

@@ -5,33 +5,55 @@ representation, (2) wide MLP-DenseNet policy/value nets, (3) Ape-X-style
 distributed collection — on the pure-JAX pendulum swing-up, and prints the
 effective-rank trace showing the rank-collapse mitigation (paper §4).
 
+Built on the layered experiment API: the ``quickstart`` preset plus
+``--override key=value`` tweaks (dotted spec paths or legacy flat aliases),
+with optional checkpoint/resume through the run handle.
+
     PYTHONPATH=src python examples/quickstart.py [--steps 2000]
+        [--override network.num_units=256] [--override replay.backend=device]
+        [--ckpt run.npz] [--resume run.npz]
 """
 import argparse
 
-from repro.rl import RunConfig, run_training
+from repro.rl import Experiment, parse_overrides, presets
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=1000)
-    ap.add_argument("--units", type=int, default=128)
+    ap.add_argument("--units", type=int, default=None,
+                    help="network width (default 128; fresh runs only)")
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="spec override, e.g. network.num_layers=4 or "
+                         "replay_backend=device (repeatable)")
+    ap.add_argument("--ckpt", default="", help="save the run handle here")
+    ap.add_argument("--resume", default="",
+                    help="restore a --ckpt checkpoint and keep training")
     args = ap.parse_args()
 
-    cfg = RunConfig(
-        env="pendulum", algo="sac",
-        num_units=args.units, num_layers=2,       # wide-over-deep (§4.1)
-        connectivity="densenet",                  # MLP-DenseNet (§3.3)
-        use_ofenet=True, ofenet_layers=4, ofenet_units=32,   # §3.1
-        distributed=True, n_core=2, n_env=16,     # Ape-X-like (§3.2)
-        total_steps=args.steps, warmup_steps=300,
-        eval_every=max(args.steps // 8, 1), srank_every=max(args.steps // 8, 1),
-    )
-    res = run_training(cfg, progress=lambda s, r, m: print(
+    if args.resume:
+        if args.override or args.units is not None:
+            ap.error("--override/--units cannot be combined with --resume: "
+                     "the spec comes from the checkpoint metadata")
+        exp = Experiment.restore(args.resume)
+        print(f"resumed at step {exp.step} (spec from checkpoint metadata)")
+    else:
+        spec = presets.get("quickstart").override(
+            num_units=args.units or 128, total_steps=args.steps,
+            eval_every=max(args.steps // 8, 1),
+            srank_every=max(args.steps // 8, 1),
+            **parse_overrides(args.override))
+        exp = Experiment.from_spec(spec)
+
+    res = exp.run(args.steps, progress=lambda s, r, m: print(
         f"step {s:6d}  eval return {r:9.1f}  "
         f"critic {m.get('critic_loss', 0):.3f}  aux {m.get('aux_loss', 0):.3f}"))
     print(f"\nparams={res.param_count:,}  max return={res.max_return:.1f}")
     print("effective-rank trace (srank of Q features):", res.sranks)
+    if args.ckpt:
+        exp.save(args.ckpt)
+        print(f"checkpoint -> {args.ckpt}  (resume with --resume {args.ckpt})")
 
 
 if __name__ == "__main__":

@@ -3,29 +3,19 @@
 Runs Full / w/o Ape-X / w/o OFENet / w/o DenseNet / original-SAC on the same
 env+budget and prints the Fig.-10-style comparison table.
 
-``--replay device`` flips every variant onto the device-resident replay
-(``repro.replay``): actor collection and the replay add fuse into one jitted
-program and sampling/priority updates stay on device — same learning curves,
-no per-step host<->device transfer of the replay store. ``--replay-kernel
-pallas`` additionally routes the sum-tree through the Pallas descent kernel
-(interpret mode on CPU; see benchmarks/replay_micro.py for throughput).
-
-``--loop scan`` drives the whole collect->add->sample->update loop as a
-jitted ``lax.scan`` superstep — one host dispatch per eval chunk instead of
-~5 per gradient step (seed-identical to the python loop; throughput:
-benchmarks/loop_fusion.py). ``--n-step 3`` turns on Ape-X n-step returns,
-computed on device in the replay add path. ``--block-backend fused`` runs
-every MLP block (actor, critics, OFENet) through the fused streaming
-DenseNet-stack kernel (kernels/dense_block/stack.py; throughput:
-benchmarks/dense_stack.py).
+Variants build from the ``rl-distributed`` preset (device-resident replay +
+scan superstep by default — the production path) through the layered spec
+API. Any spec field is reachable with ``--override key=value`` (repeatable;
+dotted paths or legacy flat aliases), replacing the old grown flag list:
 
     PYTHONPATH=src python examples/rl_distributed.py [--steps 800]
-        [--replay host|device] [--replay-kernel xla|pallas]
-        [--loop python|scan] [--n-step 1|3] [--block-backend jnp|fused]
+        [--override replay.backend=host] [--override replay.kernel=pallas]
+        [--override execution.loop=python] [--override replay.n_step=3]
+        [--override network.block_backend=fused]
 """
 import argparse
 
-from repro.rl import RunConfig, run_training
+from repro.rl import Experiment, parse_overrides, presets
 
 VARIANTS = {
     "full":        dict(),
@@ -42,27 +32,22 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=800)
     ap.add_argument("--env", default="pendulum")
-    ap.add_argument("--replay", default="host", choices=["host", "device"])
-    ap.add_argument("--replay-kernel", default="xla",
-                    choices=["xla", "pallas"])
-    ap.add_argument("--loop", default="python", choices=["python", "scan"])
-    ap.add_argument("--n-step", type=int, default=1, choices=[1, 3])
-    ap.add_argument("--block-backend", default="jnp",
-                    choices=["jnp", "fused"])
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="spec override, e.g. replay.backend=host or "
+                         "n_step=3 (repeatable)")
     args = ap.parse_args()
-    base = dict(env=args.env, algo="sac", num_units=128, num_layers=2,
-                connectivity="densenet", use_ofenet=True, ofenet_units=32,
-                ofenet_layers=2, distributed=True, n_core=2, n_env=16,
-                total_steps=args.steps, warmup_steps=300,
-                eval_every=args.steps // 2, replay_backend=args.replay,
-                replay_kernel=args.replay_kernel, loop=args.loop,
-                n_step=args.n_step, block_backend=args.block_backend)
-    print(f"replay backend: {args.replay} ({args.replay_kernel}), "
-          f"loop={args.loop}, n_step={args.n_step}, "
-          f"blocks={args.block_backend}")
+
+    overrides = parse_overrides(args.override)
+    base = presets.get("rl-distributed").override(
+        env=args.env, total_steps=args.steps,
+        eval_every=max(args.steps // 2, 1), **overrides)
+    r, x, n = base.replay, base.execution, base.network
+    print(f"replay backend: {r.backend} ({r.kernel}), loop={x.loop}, "
+          f"n_step={r.n_step}, blocks={n.block_backend}")
     print(f"{'variant':<14}{'max return':>12}{'params':>12}")
     for name, ov in VARIANTS.items():
-        res = run_training(RunConfig(**{**base, **ov}))
+        res = Experiment.from_spec(base.override(**ov)).run(eval_at_end=True)
         print(f"{name:<14}{res.max_return:>12.1f}{res.param_count:>12,}")
 
 

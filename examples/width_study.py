@@ -2,26 +2,30 @@
 as a single runnable study with loss-surface sharpness readouts.
 
     PYTHONPATH=src python examples/width_study.py [--steps 400]
+        [--override execution.loop=scan]
 """
 import argparse
 
-from repro.rl import RunConfig, run_training
+from repro.rl import Experiment, parse_overrides, presets
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="KEY=VALUE")
     args = ap.parse_args()
+    base = presets.get("fig4-grid").override(
+        n_env=1, total_steps=args.steps, warmup_steps=300,
+        eval_every=max(args.steps // 2, 1),
+        **parse_overrides(args.override))
     grid = [("deep (6x32)", dict(num_layers=6, num_units=32)),
             ("base (2x32)", dict(num_layers=2, num_units=32)),
             ("wide (2x256)", dict(num_layers=2, num_units=256))]
     print(f"{'config':<14}{'max return':>12}{'params':>10}")
     for name, shp in grid:
-        cfg = RunConfig(env="pendulum", algo="sac", connectivity="mlp",
-                        use_ofenet=False, distributed=False, n_env=1,
-                        total_steps=args.steps, warmup_steps=300,
-                        eval_every=args.steps // 2, **shp)
-        res = run_training(cfg)
+        res = Experiment.from_spec(base.override(**shp)).run(
+            eval_at_end=True)
         print(f"{name:<14}{res.max_return:>12.1f}{res.param_count:>10,}")
 
 

@@ -1,2 +1,52 @@
+"""repro.rl — the paper's RL system behind a layered, typed experiment API.
+
+Quick tour
+----------
+The run surface is a validated spec tree plus a resumable handle
+(``repro.rl.experiment``)::
+
+    from repro.rl import Experiment, presets
+
+    spec = presets.get("quickstart").override(num_units=256,
+                                              **{"replay.backend": "device"})
+    exp = Experiment.from_spec(spec)       # builds everything, no jit yet
+    exp.run(5_000)                         # advance; eval at spec cadence
+    exp.save("run.npz")                    # full state + spec metadata
+    exp = Experiment.restore("run.npz")    # later / elsewhere
+    exp.run(5_000)                         # seed-exact with run(10_000)
+    rows = list(exp.metrics())             # per-eval metric rows
+
+Spec tree (``ExperimentSpec``): ``env``/``algo`` plus five sub-specs —
+``network`` (width/depth/connectivity/activation/``block_backend``),
+``ofenet`` (decoupled representation), ``replay``
+(host|device backend, xla|pallas kernel, capacity, PER, n-step),
+``execution`` (python|scan loop driver, mesh shards, batch, steps, Ape-X
+actor pool, seed) and ``eval`` (cadence, episodes, srank). Invalid values
+and unsupported combinations (e.g. ``replay.kernel="pallas"`` on the host
+backend, the fused block kernel with OFENet batch norm, mesh sharding on
+the host replay) raise ``SpecError`` at construction; valid-but-degraded
+combinations (python loop on a mesh) raise ``SpecWarning``. Specs
+serialize via ``to_dict``/``from_dict`` (unknown keys skipped with a
+warning — forward compat) and sweep via ``override`` with dotted paths or
+the flat legacy aliases.
+
+Presets (``repro.rl.presets``): every paper scenario by name —
+``fig1-depth``, ``fig3-width``, ``fig4-grid``, ``fig5-connectivity``,
+``fig6-ofenet``, ``fig8-distributed``, ``fig10-ablation``,
+``fig13-activation``, ``table1-ours``, ``table1-orig`` — plus
+``quickstart``, ``rl-distributed`` and ``smoke``. All ``benchmarks/fig*.py``
+and ``examples/`` build through ``presets.get(name).override(...)``.
+
+Deprecation path: the flat ``RunConfig`` + one-shot ``run_training`` remain
+as thin shims that translate to a spec and delegate to ``Experiment``,
+seed-for-seed. They now validate the combos the flat surface used to drop
+silently (host replay + pallas kernel raises; mesh + python loop warns) and
+emit a ``DeprecationWarning``; new code should build specs or presets.
+"""
 from repro.rl.envs import ENVS, EnvSpec, make_env, rollout_return
 from repro.rl.runner import RunConfig, RunResult, run_training
+from repro.rl.experiment import (EvalSpec, ExecutionSpec, Experiment,
+                                 ExperimentSpec, NetworkSpec, OFENetSpec,
+                                 ReplaySpec, SpecError, SpecWarning,
+                                 parse_overrides)
+from repro.rl import presets

@@ -1,0 +1,695 @@
+"""Layered experiment API: typed spec tree + resumable ``Experiment`` handle.
+
+The run surface for the paper's method is a tree of small, validated specs
+instead of the flat 22-field ``RunConfig``:
+
+    ExperimentSpec
+    ├── env / algo            task + algorithm ("pendulum", "sac" | "td3")
+    ├── network:   NetworkSpec    width / depth / connectivity / activation /
+    │                             block_backend  (Figs. 1/3/4/5/13)
+    ├── ofenet:    OFENetSpec     decoupled representation  (Figs. 6/7)
+    ├── replay:    ReplaySpec     backend / kernel / capacity / PER / n-step
+    ├── execution: ExecutionSpec  loop driver / mesh shards / batch / steps /
+    │                             Ape-X actor pool / seed
+    └── eval:      EvalSpec       eval cadence + srank instrumentation
+
+Every field is choice-checked at construction and unsupported combinations
+are rejected with actionable messages (``SpecError``) instead of failing
+deep inside jit — e.g. ``replay.kernel="pallas"`` with the host NumPy
+replay, or the fused block kernel with OFENet batch norm. Combinations that
+merely *degrade* (a python-loop driver on a sharded mesh) emit a
+``SpecWarning``. ``to_dict``/``from_dict`` serialize the tree (unknown keys
+are ignored with a warning — forward compat for older binaries reading newer
+checkpoints), and ``override(**kwargs)`` builds sweep variants from dotted
+paths (``{"network.num_units": 512}``) or the flat legacy aliases
+(``num_units=512``).
+
+On top of the spec sits the resumable ``Experiment`` handle, replacing the
+one-shot blocking ``run_training``:
+
+    exp = Experiment.from_spec(spec)        # builds the Trainer, no jit yet
+    exp.run(10_000)                         # advance (either loop driver)
+    exp.save("run.npz")                     # full state -> checkpoint/ckpt.py
+    ...
+    exp = Experiment.restore("run.npz")     # spec read back from metadata
+    exp.run(10_000)                         # == uninterrupted 20k, seed-exact
+    rows = list(exp.metrics())              # RunResult-style eval rows
+
+``save`` round-trips the complete training state — agent/actors/replay
+pytree (typed PRNG keys stored as raw key data), the host replay buffer's
+NumPy arrays + sum tree + RNG state when ``replay.backend="host"``, and the
+accumulated eval history — through ``repro.checkpoint.ckpt`` with the spec
+serialized into the checkpoint metadata, so a checkpoint is self-describing.
+
+Paper scenarios are named in ``repro.rl.presets``; ``RunConfig`` /
+``run_training`` remain as deprecation shims over this API.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import time
+import warnings
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core.blocks import BLOCK_BACKENDS, CONNECTIVITIES
+from repro.core.effective_rank import effective_rank
+from repro.core.ofenet import OFENetConfig
+from repro.common import ACTIVATIONS
+from repro.rl.envs import ENVS
+from repro.rl.runner import RunConfig, RunResult, Trainer, TrainLoopState
+
+ALGOS = ("sac", "td3")
+REPLAY_BACKENDS = ("host", "device")
+REPLAY_KERNELS = ("xla", "pallas")
+LOOPS = ("python", "scan")
+
+_SPEC_VERSION = 1
+
+
+class SpecError(ValueError):
+    """Invalid spec field or unsupported combination, caught at construction."""
+
+
+class SpecWarning(UserWarning):
+    """Valid-but-degraded combination, or forward-compat key skipping."""
+
+
+def _choice(spec: str, field: str, value, choices) -> None:
+    if value not in choices:
+        raise SpecError(f"{spec}.{field}={value!r} is not one of "
+                        f"{tuple(choices)}")
+
+
+def _positive(spec: str, field: str, value, minimum: int = 1) -> None:
+    if not isinstance(value, (int, np.integer)) or isinstance(value, bool) \
+            or value < minimum:
+        raise SpecError(f"{spec}.{field}={value!r} must be an int >= "
+                        f"{minimum}")
+
+
+def _boolean(spec: str, field: str, value) -> None:
+    # a truthy string like "false" silently flipping a knob is exactly the
+    # stringly-typed failure this spec tree exists to kill
+    if not isinstance(value, (bool, np.bool_)):
+        raise SpecError(f"{spec}.{field}={value!r} must be a bool")
+
+
+def _sub_from_dict(cls, name: str, d: dict):
+    if not isinstance(d, dict):
+        raise SpecError(f"spec section {name!r} must be a dict, got "
+                        f"{type(d).__name__}")
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - known)
+    if unknown:
+        warnings.warn(f"ExperimentSpec.from_dict: ignoring unknown "
+                      f"{name} keys {unknown} (forward compat)", SpecWarning,
+                      stacklevel=3)
+    return cls(**{k: v for k, v in d.items() if k in known})
+
+
+# --------------------------------------------------------------- sub-specs
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    """Policy/value trunk: the paper's width/depth/connectivity axes."""
+    num_units: int = 256
+    num_layers: int = 2
+    connectivity: str = "densenet"     # mlp | resnet | densenet | d2rl
+    activation: str = "swish"
+    block_backend: str = "jnp"         # jnp | fused (streaming stack kernel)
+
+    def __post_init__(self):
+        _positive("network", "num_units", self.num_units)
+        _positive("network", "num_layers", self.num_layers, minimum=0)
+        _choice("network", "connectivity", self.connectivity, CONNECTIVITIES)
+        _choice("network", "activation", self.activation, sorted(ACTIVATIONS))
+        _choice("network", "block_backend", self.block_backend,
+                BLOCK_BACKENDS)
+
+
+@dataclasses.dataclass(frozen=True)
+class OFENetSpec:
+    """Decoupled representation learning (paper §3.1)."""
+    enabled: bool = True
+    num_units: int = 64
+    num_layers: int = 4
+    connectivity: str = "densenet"
+    activation: str = "swish"
+    batch_norm: bool = False           # paper's OFENet uses BN; the RL
+                                       # runner default keeps it off
+
+    def __post_init__(self):
+        _boolean("ofenet", "enabled", self.enabled)
+        _boolean("ofenet", "batch_norm", self.batch_norm)
+        _positive("ofenet", "num_units", self.num_units)
+        _positive("ofenet", "num_layers", self.num_layers, minimum=0)
+        _choice("ofenet", "connectivity", self.connectivity, CONNECTIVITIES)
+        _choice("ofenet", "activation", self.activation, sorted(ACTIVATIONS))
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplaySpec:
+    """Replay storage + sampling (PR-1 device subsystem or host NumPy)."""
+    backend: str = "host"              # host | device
+    kernel: str = "xla"                # device sum-tree impl: xla | pallas
+    capacity: int = 100_000
+    prioritized: bool = True
+    n_step: int = 1                    # Ape-X n-step returns
+
+    def __post_init__(self):
+        _choice("replay", "backend", self.backend, REPLAY_BACKENDS)
+        _choice("replay", "kernel", self.kernel, REPLAY_KERNELS)
+        _boolean("replay", "prioritized", self.prioritized)
+        _positive("replay", "capacity", self.capacity)
+        _positive("replay", "n_step", self.n_step)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSpec:
+    """How the training loop runs: driver, sharding, batch, actor pool."""
+    loop: str = "python"               # python (per-step dispatch) | scan
+    mesh_shards: int = 0               # >0: actors+replay on a data mesh
+    batch_size: int = 256
+    total_steps: int = 2000            # default budget for run(steps=None)
+    warmup_steps: int = 500
+    distributed: bool = True           # Ape-X actor pool vs 1-step loop
+    n_core: int = 2
+    n_env: int = 32
+    seed: int = 0
+
+    def __post_init__(self):
+        _choice("execution", "loop", self.loop, LOOPS)
+        _boolean("execution", "distributed", self.distributed)
+        _positive("execution", "mesh_shards", self.mesh_shards, minimum=0)
+        _positive("execution", "batch_size", self.batch_size)
+        _positive("execution", "total_steps", self.total_steps, minimum=0)
+        _positive("execution", "warmup_steps", self.warmup_steps, minimum=0)
+        _positive("execution", "n_core", self.n_core)
+        _positive("execution", "n_env", self.n_env)
+
+    @property
+    def n_actors(self) -> int:
+        return self.n_core * self.n_env if self.distributed else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalSpec:
+    """Evaluation cadence + effective-rank instrumentation."""
+    every: int = 500
+    episodes: int = 3
+    srank_every: int = 0               # 0 = off
+
+    def __post_init__(self):
+        _positive("eval", "every", self.every)
+        _positive("eval", "episodes", self.episodes)
+        _positive("eval", "srank_every", self.srank_every, minimum=0)
+
+
+# flat legacy-RunConfig field -> dotted spec path, used by override() and
+# the RunConfig shim so sweeps read the same in old and new code
+_ALIASES: Dict[str, str] = {
+    "num_units": "network.num_units",
+    "num_layers": "network.num_layers",
+    "connectivity": "network.connectivity",
+    "activation": "network.activation",
+    "block_backend": "network.block_backend",
+    "use_ofenet": "ofenet.enabled",
+    "ofenet_units": "ofenet.num_units",
+    "ofenet_layers": "ofenet.num_layers",
+    "replay_backend": "replay.backend",
+    "replay_kernel": "replay.kernel",
+    "replay_capacity": "replay.capacity",
+    "prioritized": "replay.prioritized",
+    "n_step": "replay.n_step",
+    "loop": "execution.loop",
+    "mesh_shards": "execution.mesh_shards",
+    "batch_size": "execution.batch_size",
+    "total_steps": "execution.total_steps",
+    "warmup_steps": "execution.warmup_steps",
+    "distributed": "execution.distributed",
+    "n_core": "execution.n_core",
+    "n_env": "execution.n_env",
+    "seed": "execution.seed",
+    "eval_every": "eval.every",
+    "eval_episodes": "eval.episodes",
+    "srank_every": "eval.srank_every",
+}
+
+_SECTIONS: Tuple[Tuple[str, type], ...] = (
+    ("network", NetworkSpec), ("ofenet", OFENetSpec), ("replay", ReplaySpec),
+    ("execution", ExecutionSpec), ("eval", EvalSpec))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """The full, validated description of one training run."""
+    env: str = "pendulum"
+    algo: str = "sac"
+    network: NetworkSpec = dataclasses.field(default_factory=NetworkSpec)
+    ofenet: OFENetSpec = dataclasses.field(default_factory=OFENetSpec)
+    replay: ReplaySpec = dataclasses.field(default_factory=ReplaySpec)
+    execution: ExecutionSpec = dataclasses.field(
+        default_factory=ExecutionSpec)
+    eval: EvalSpec = dataclasses.field(default_factory=EvalSpec)
+
+    # ------------------------------------------------------- validation
+    def __post_init__(self):
+        _choice("spec", "env", self.env, sorted(ENVS))
+        _choice("spec", "algo", self.algo, ALGOS)
+        for name, cls in _SECTIONS:
+            if not isinstance(getattr(self, name), cls):
+                raise SpecError(f"spec.{name} must be a {cls.__name__}, got "
+                                f"{type(getattr(self, name)).__name__}")
+        self._validate_combos()
+
+    def _validate_combos(self):
+        r, x = self.replay, self.execution
+        if r.kernel == "pallas" and r.backend != "device":
+            raise SpecError(
+                "replay.kernel='pallas' requires replay.backend='device': "
+                "the host replay is a NumPy sum-tree and has no Pallas "
+                "path (the flat RunConfig used to ignore this silently). "
+                "Set replay.backend='device' or replay.kernel='xla'.")
+        if x.mesh_shards > 0:
+            if r.backend != "device":
+                raise SpecError(
+                    "execution.mesh_shards>0 requires "
+                    "replay.backend='device': mesh-sharded replay lives in "
+                    "repro.replay (sharded collect+add / cross-shard "
+                    "sample); the host NumPy buffer cannot be sharded.")
+            for fname, val in (("n_actors", x.n_actors),
+                               ("batch_size", x.batch_size),
+                               ("capacity", r.capacity)):
+                if val % x.mesh_shards:
+                    raise SpecError(
+                        f"execution.mesh_shards={x.mesh_shards} must divide "
+                        f"{fname}={val} (actors, batch and replay rows are "
+                        f"split evenly across the mesh 'data' axis)")
+            if x.loop == "python":
+                warnings.warn(
+                    "execution.mesh_shards>0 with execution.loop='python' "
+                    "degrades quietly: the per-step dispatch loop forfeits "
+                    "the scan superstep's dispatch amortization on the "
+                    "mesh. Prefer execution.loop='scan'.", SpecWarning,
+                    stacklevel=3)
+        if (self.network.block_backend == "fused" and self.ofenet.enabled
+                and self.ofenet.batch_norm):
+            raise SpecError(
+                "network.block_backend='fused' does not support "
+                "ofenet.batch_norm=True: the streaming stack kernel has no "
+                "fused BN pass yet (ROADMAP follow-on), and silently "
+                "falling back would train a different program than "
+                "requested. Set ofenet.batch_norm=False or "
+                "network.block_backend='jnp'.")
+
+    # ---------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        d = {"version": _SPEC_VERSION, "env": self.env, "algo": self.algo}
+        for name, _ in _SECTIONS:
+            d[name] = dataclasses.asdict(getattr(self, name))
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        """Rebuild a spec from ``to_dict`` output (e.g. checkpoint
+        metadata). Unknown keys — a newer writer's fields — are skipped
+        with a ``SpecWarning`` instead of failing, so old code can still
+        load new checkpoints; values it does understand are validated as
+        usual."""
+        d = dict(d)
+        d.pop("version", None)
+        kw: Dict[str, Any] = {}
+        for f in ("env", "algo"):
+            if f in d:
+                kw[f] = d.pop(f)
+        for name, sub in _SECTIONS:
+            if name in d:
+                kw[name] = _sub_from_dict(sub, name, d.pop(name))
+        if d:
+            warnings.warn(f"ExperimentSpec.from_dict: ignoring unknown "
+                          f"keys {sorted(d)} (forward compat)", SpecWarning,
+                          stacklevel=2)
+        return cls(**kw)
+
+    def override(self, **kwargs) -> "ExperimentSpec":
+        """A new validated spec with the given fields replaced.
+
+        Keys are dotted spec paths (``{"replay.backend": "device"}`` via
+        ``override(**mapping)``) or the flat legacy RunConfig aliases
+        (``num_units=512``, ``replay_backend="device"``); top-level
+        ``env``/``algo`` work as-is. Unknown keys raise ``SpecError`` —
+        sweeps should fail loudly, not drop a knob."""
+        d = self.to_dict()
+        for key, value in kwargs.items():
+            path = _ALIASES.get(key, key)
+            parts = path.split(".")
+            node = d
+            ok = True
+            for p in parts[:-1]:
+                if not isinstance(node.get(p), dict):
+                    ok = False
+                    break
+                node = node[p]
+            if not ok or parts[-1] not in node or parts[-1] == "version" \
+                    or isinstance(node[parts[-1]], dict):
+                raise SpecError(
+                    f"unknown override key {key!r}; use a dotted spec path "
+                    f"(e.g. 'network.num_units'), a legacy alias "
+                    f"({sorted(_ALIASES)}), or 'env'/'algo'")
+            node[parts[-1]] = value
+        # d round-trips through from_dict (no unknown keys possible), so the
+        # only warnings that can fire here are genuine combo warnings
+        return ExperimentSpec.from_dict(d)
+
+    # ------------------------------------------------- RunConfig bridge
+    @classmethod
+    def from_run_config(cls, cfg: RunConfig) -> "ExperimentSpec":
+        """Translate the flat legacy config (validates combos on the way)."""
+        return cls(
+            env=cfg.env, algo=cfg.algo,
+            network=NetworkSpec(
+                num_units=cfg.num_units, num_layers=cfg.num_layers,
+                connectivity=cfg.connectivity, activation=cfg.activation,
+                block_backend=cfg.block_backend),
+            ofenet=OFENetSpec(
+                enabled=cfg.use_ofenet, num_units=cfg.ofenet_units,
+                num_layers=cfg.ofenet_layers),
+            replay=ReplaySpec(
+                backend=cfg.replay_backend, kernel=cfg.replay_kernel,
+                capacity=cfg.replay_capacity, prioritized=cfg.prioritized,
+                n_step=cfg.n_step),
+            execution=ExecutionSpec(
+                loop=cfg.loop, mesh_shards=cfg.mesh_shards,
+                batch_size=cfg.batch_size, total_steps=cfg.total_steps,
+                warmup_steps=cfg.warmup_steps, distributed=cfg.distributed,
+                n_core=cfg.n_core, n_env=cfg.n_env, seed=cfg.seed),
+            eval=EvalSpec(every=cfg.eval_every, episodes=cfg.eval_episodes,
+                          srank_every=cfg.srank_every))
+
+    def to_run_config(self, **extra) -> RunConfig:
+        """The flat view the Trainer engine consumes (OFENet connectivity/
+        activation/batch_norm travel separately via ``ofenet_config``)."""
+        n, o, r, x, e = (self.network, self.ofenet, self.replay,
+                         self.execution, self.eval)
+        return RunConfig(
+            env=self.env, algo=self.algo, num_units=n.num_units,
+            num_layers=n.num_layers, connectivity=n.connectivity,
+            activation=n.activation, block_backend=n.block_backend,
+            use_ofenet=o.enabled, ofenet_units=o.num_units,
+            ofenet_layers=o.num_layers, distributed=x.distributed,
+            n_core=x.n_core, n_env=x.n_env, prioritized=r.prioritized,
+            replay_backend=r.backend, replay_kernel=r.kernel, loop=x.loop,
+            n_step=r.n_step, mesh_shards=x.mesh_shards,
+            batch_size=x.batch_size, total_steps=x.total_steps,
+            warmup_steps=x.warmup_steps, replay_capacity=r.capacity,
+            eval_every=e.every, eval_episodes=e.episodes, seed=x.seed,
+            srank_every=e.srank_every, **extra)
+
+    def ofenet_config(self, obs_dim: int, act_dim: int) -> OFENetConfig:
+        o = self.ofenet
+        return OFENetConfig(
+            state_dim=obs_dim, action_dim=act_dim, num_layers=o.num_layers,
+            num_units=o.num_units, connectivity=o.connectivity,
+            activation=o.activation, batch_norm=o.batch_norm,
+            block_backend=self.network.block_backend)
+
+
+def parse_overrides(pairs: List[str]) -> Dict[str, Any]:
+    """CLI ``--override key=value`` pairs -> an ``override()`` kwargs dict.
+
+    Values parse as Python literals when possible (``True``, ``3``,
+    ``0.5``), with shell-style ``true``/``false`` accepted as bools, and
+    fall back to strings (``device``, ``scan``) — bool-typed spec fields
+    reject leftover strings at validation, so a typo'd flag can never run
+    the wrong experiment silently."""
+    out: Dict[str, Any] = {}
+    for s in pairs:
+        key, sep, val = s.partition("=")
+        if not sep or not key:
+            raise SpecError(f"override {s!r} must be key=value "
+                            f"(e.g. replay.backend=device)")
+        if val.lower() in ("true", "false"):
+            out[key] = val.lower() == "true"
+            continue
+        try:
+            out[key] = ast.literal_eval(val)
+        except (ValueError, SyntaxError):
+            out[key] = val
+    return out
+
+
+# ------------------------------------------------------------------ handle
+
+def _is_key(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype,
+                                                  jax.dtypes.prng_key)
+
+
+def _unkey(tree):
+    """Typed PRNG key leaves -> raw uint32 key data (npz-serializable)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.random.key_data(x) if _is_key(x) else x, tree)
+
+
+def _rekey(tree, template):
+    """Inverse of ``_unkey`` using ``template``'s leaves to find keys."""
+    return jax.tree_util.tree_map(
+        lambda saved, tmpl: (jax.random.wrap_key_data(jnp.asarray(saved))
+                             if _is_key(tmpl) else saved),
+        tree, template)
+
+
+class Experiment:
+    """A resumable handle on one training run.
+
+    ``from_spec`` builds the Trainer (env, agent ops, replay wiring) without
+    executing any jitted program; the first ``run``/``save`` initializes
+    state (agent init + random-policy warmup). ``run(steps)`` advances in
+    chunks under either loop driver, evaluating at absolute multiples of
+    ``spec.eval.every`` — so ``run(N); save; restore; run(M)`` is seed-exact
+    with an uninterrupted ``run(N + M)``. ``save``/``restore`` round-trip
+    the complete training state through ``repro.checkpoint.ckpt`` with the
+    spec in the checkpoint metadata.
+
+    Bitwise-reproducibility contract: the python driver is bitwise under any
+    split point. The scan driver is bitwise when ``run`` calls stop at chunk
+    boundaries (multiples of ``eval.every`` / ``eval.srank_every``); a
+    mid-period stop re-chunks the scan, and the chunk's final unrolled
+    superstep fuses differently from the in-scan body, shifting floats at
+    the ~1e-6 level (same compiled-program caveat as the PR-2 scan/python
+    drivers, which agree to 1e-4, not bitwise).
+    """
+
+    def __init__(self, spec: ExperimentSpec, *, mesh=None):
+        self.spec = spec
+        self._cfg = spec.to_run_config()
+        self.trainer = Trainer(spec, mesh=mesh)
+        self._ls: Optional[TrainLoopState] = None
+        self.step = 0
+        self.returns: List[float] = []
+        self.eval_steps: List[int] = []
+        self.sranks: List[int] = []
+        self._rows: List[Dict[str, float]] = []
+        self._last_metrics: Dict[str, float] = {}
+        self._last_batch = None
+        self._last_priorities = None
+        self._wall = 0.0
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def from_spec(cls, spec: ExperimentSpec, *, mesh=None) -> "Experiment":
+        return cls(spec, mesh=mesh)
+
+    @classmethod
+    def restore(cls, path: str, *, mesh=None) -> "Experiment":
+        """Rebuild a handle from ``save`` output: spec from the checkpoint
+        metadata, every state leaf (and the host replay buffer + RNG, if
+        any) from the array payload."""
+        meta = ckpt.load_metadata(path)
+        if meta is None or "spec" not in meta:
+            raise FileNotFoundError(
+                f"{path}: no spec-bearing checkpoint metadata "
+                f"({path}.meta.json) — was this saved by Experiment.save?")
+        spec = ExperimentSpec.from_dict(meta["spec"])
+        exp = cls(spec, mesh=mesh)
+        template = exp.trainer.init_template()
+        tree = ckpt.restore(path, {"loop": _unkey(template)})
+        exp._ls = exp.trainer._pin(_rekey(tree["loop"], template), put=True)
+
+        st = meta["experiment"]
+        exp.step = int(st["step"])
+        exp.returns = [float(r) for r in st["returns"]]
+        exp.eval_steps = [int(s) for s in st["eval_steps"]]
+        exp.sranks = [int(s) for s in st["sranks"]]
+        exp._rows = [dict(r) for r in st.get("rows", [])]
+        exp._last_metrics = dict(st.get("last_metrics", {}))
+        exp._wall = float(st.get("wall_time_s", 0.0))
+        exp.trainer.n_params = int(st["n_params"])
+        # dispatch accounting continues across the resume so
+        # metrics["host_dispatches"] matches an uninterrupted run
+        exp.trainer.dispatches = int(st.get("dispatches", 0))
+
+        buf = exp.trainer.buffer
+        if buf is not None:
+            inner = getattr(buf, "_inner", buf)
+            raw = np.load(path)
+            for k in inner.data:
+                inner.data[k][...] = raw[f"host/data/{k}"]
+            inner.tree.tree[...] = raw["host/tree"]
+            b = st["buffer"]
+            inner.ptr = int(b["ptr"])
+            inner.count = int(b["count"])
+            inner.max_priority = float(b["max_priority"])
+            rng = np.random.default_rng()
+            rng.bit_generator.state = b["rng_state"]
+            exp.trainer.rng = rng
+        return exp
+
+    # ------------------------------------------------------------ running
+    def _ensure_init(self):
+        if self._ls is None:
+            self._ls = self.trainer.init()
+
+    def run(self, steps: Optional[int] = None, *,
+            progress: Optional[Callable] = None, eval_at_end: bool = False,
+            keep_last: bool = False) -> RunResult:
+        """Advance ``steps`` gradient steps (default: the spec budget).
+
+        Evaluation/srank fire at absolute multiples of ``spec.eval.every`` /
+        ``srank_every``, independent of where ``run`` calls start and stop —
+        that is what makes interrupted and uninterrupted schedules
+        seed-exact. ``eval_at_end`` additionally evaluates at the final step
+        of THIS call (the legacy ``run_training`` contract; it consumes a
+        PRNG split, so only bitwise-reproducible by runs stopping at the
+        same step). ``keep_last`` retains the final sampled batch +
+        priorities (loss-landscape tooling). Returns the cumulative
+        ``RunResult`` snapshot."""
+        t0 = time.time()
+        cfg = self._cfg
+        if steps is None:
+            steps = cfg.total_steps
+        self._ensure_init()
+        trainer, ls = self.trainer, self._ls
+        start, end = self.step, self.step + steps
+
+        if cfg.loop == "scan":
+            # chunk boundaries: every eval point AND (when instrumented)
+            # every srank point, so the scan driver records the exact same
+            # returns/sranks steps as the per-step python loop
+            step = start
+            while step < end:
+                stops = [(step // cfg.eval_every + 1) * cfg.eval_every, end]
+                if cfg.srank_every:
+                    stops.append((step // cfg.srank_every + 1)
+                                 * cfg.srank_every)
+                stop = min(stops)
+                do_eval = (stop % cfg.eval_every == 0
+                           or (eval_at_end and stop == end))
+                do_srank = (bool(cfg.srank_every)
+                            and stop % cfg.srank_every == 0)
+                want_last = keep_last and stop == end
+                ls, out = trainer.chunk_fn(stop - step, do_eval, do_srank,
+                                           want_last)(ls)
+                step = stop
+                if do_srank:
+                    self.sranks.append(int(out["srank"]))
+                if want_last:
+                    self._last_batch, self._last_priorities = out["last"]
+                if do_eval:
+                    self._record_eval(
+                        step, float(np.mean(np.asarray(out["eval"]))),
+                        {k: float(np.asarray(v))
+                         for k, v in out["scal"].items()}, progress)
+        else:
+            metrics = batch = None
+            for step in range(start + 1, end + 1):
+                ls, metrics, batch = trainer.py_step(ls)
+                if cfg.srank_every and step % cfg.srank_every == 0:
+                    self.sranks.append(
+                        int(effective_rank(metrics["q_features"])))
+                if (step % cfg.eval_every == 0
+                        or (eval_at_end and step == end)):
+                    key, ke = jax.random.split(ls.key)
+                    ls = ls._replace(key=key)
+                    rets = np.asarray(trainer.eval_j(ls.agent["params"],
+                                                     ke))
+                    self._record_eval(
+                        step, float(rets.mean()),
+                        {k: float(np.asarray(v).mean())
+                         for k, v in metrics.items()
+                         if np.asarray(v).ndim == 0}, progress)
+            if keep_last and metrics is not None:
+                self._last_batch = batch
+                self._last_priorities = metrics["priorities"]
+
+        self._ls, self.step = ls, end
+        self._wall += time.time() - t0
+        return self.result(include_state=keep_last)
+
+    def _record_eval(self, step, ret, scalars, progress):
+        self.returns.append(ret)
+        self.eval_steps.append(step)
+        self._last_metrics = scalars
+        self._rows.append({"step": step, "return": ret, **scalars})
+        if progress:
+            progress(step, ret, scalars)
+
+    # ------------------------------------------------------------ results
+    def metrics(self) -> Iterator[Dict[str, float]]:
+        """Stream the RunResult-style eval rows recorded so far (one dict
+        per eval point: step, return, and the scalar training metrics)."""
+        return iter([dict(r) for r in self._rows])
+
+    def result(self, *, include_state: bool = False) -> RunResult:
+        """The cumulative RunResult snapshot (shape-compatible with the
+        legacy ``run_training`` return)."""
+        metrics_out = dict(self._last_metrics,
+                           host_dispatches=float(self.trainer.dispatches))
+        return RunResult(
+            returns=list(self.returns), eval_steps=list(self.eval_steps),
+            sranks=list(self.sranks), metrics=metrics_out,
+            param_count=getattr(self.trainer, "n_params", 0),
+            wall_time_s=self._wall,
+            state=(self._ls.agent if include_state and self._ls is not None
+                   else None),
+            last_batch=self._last_batch,
+            last_priorities=(None if self._last_priorities is None
+                             else np.asarray(self._last_priorities)))
+
+    # ------------------------------------------------------- checkpointing
+    def save(self, path: str) -> None:
+        """Write the full training state + spec metadata to ``path``.
+
+        Layout: one npz holding the ``TrainLoopState`` pytree (typed PRNG
+        keys as raw key data) and, for the host replay backend, the buffer
+        arrays + float64 sum tree under ``host/``; a sibling
+        ``.meta.json`` with the serialized spec, eval history, and the
+        host buffer's scalar cursor/RNG state."""
+        self._ensure_init()
+        tree: Dict[str, Any] = {"loop": _unkey(self._ls)}
+        state: Dict[str, Any] = {
+            "step": self.step, "returns": self.returns,
+            "eval_steps": self.eval_steps, "sranks": self.sranks,
+            "rows": self._rows, "last_metrics": self._last_metrics,
+            "wall_time_s": self._wall,
+            "n_params": int(self.trainer.n_params),
+            "dispatches": int(self.trainer.dispatches),
+        }
+        buf = self.trainer.buffer
+        if buf is not None:
+            inner = getattr(buf, "_inner", buf)
+            tree["host"] = {"data": inner.data, "tree": inner.tree.tree}
+            state["buffer"] = {
+                "ptr": inner.ptr, "count": inner.count,
+                "max_priority": inner.max_priority,
+                "rng_state": self.trainer.rng.bit_generator.state,
+            }
+        ckpt.save(path, tree,
+                  metadata={"spec": self.spec.to_dict(),
+                            "experiment": state})

@@ -1,7 +1,11 @@
 """Training runner: glues algorithms, OFENet, replay and the Ape-X actor pool.
 
-``run_training`` is the single entry point used by benchmarks/examples; every
-paper ablation is reachable through ``RunConfig`` flags:
+The typed entry point is ``repro.rl.experiment`` (``ExperimentSpec`` +
+resumable ``Experiment`` handle); this module keeps the ``Trainer`` engine
+they drive plus the legacy flat surface. ``run_training``/``RunConfig``
+remain as thin deprecation shims that translate to a spec and delegate,
+seed-for-seed. Every paper ablation is reachable through ``RunConfig``
+flags (mapped 1:1 onto spec fields):
 
 * ``connectivity``           — mlp | resnet | densenet | d2rl   (Fig. 5)
 * ``num_units / num_layers`` — width/depth study                (Figs. 1/3/4)
@@ -49,7 +53,6 @@ step; -1 on the host backend, which does not stamp rows).
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
@@ -104,9 +107,11 @@ class RunConfig:
     keep_state: bool = False         # return final agent state (landscapes)
 
 
-def _build(cfg: RunConfig, env: EnvSpec):
-    ofe_cfg = None
-    if cfg.use_ofenet:
+def _build(cfg: RunConfig, env: EnvSpec, ofe_cfg: Optional[OFENetConfig] = None):
+    """Algorithm pieces for ``cfg``. ``ofe_cfg`` overrides the RunConfig-era
+    OFENet derivation (the ExperimentSpec path, which carries its own
+    connectivity/activation/batch_norm knobs)."""
+    if ofe_cfg is None and cfg.use_ofenet:
         ofe_cfg = OFENetConfig(state_dim=env.obs_dim, action_dim=env.act_dim,
                                num_layers=cfg.ofenet_layers,
                                num_units=cfg.ofenet_units,
@@ -181,13 +186,21 @@ class Trainer:
     issued through this Trainer (the parity test's traced-call counter).
     """
 
-    def __init__(self, cfg: RunConfig, mesh=None):
+    def __init__(self, cfg, mesh=None):
+        # accepts a flat RunConfig or a typed ExperimentSpec (duck-typed via
+        # to_run_config so this module never imports repro.rl.experiment)
+        self.spec = None
+        if hasattr(cfg, "to_run_config"):
+            self.spec, cfg = cfg, cfg.to_run_config()
         self.cfg = cfg
         self.dispatches = 0
         self._chunks: Dict[tuple, Callable] = {}
         self.env = env = make_env(cfg.env)
+        ofe_cfg = None
+        if self.spec is not None and self.spec.ofenet.enabled:
+            ofe_cfg = self.spec.ofenet_config(env.obs_dim, env.act_dim)
         (self.acfg, self.init_fn, self.update_fn, sample_fn,
-         self.mean_fn) = _build(cfg, env)
+         self.mean_fn) = _build(cfg, env, ofe_cfg=ofe_cfg)
         self.n_actors = cfg.n_core * cfg.n_env if cfg.distributed else 1
         self.gamma = self.acfg.gamma
 
@@ -473,8 +486,10 @@ class Trainer:
         return self._chunks[sig]
 
     # ------------------------------------------------------- initial state
-    def init(self) -> TrainLoopState:
-        """Agent/actor/replay init + random-policy warmup (paper A.4)."""
+    def _fresh_state(self):
+        """Agent/actor/replay init (shapes + seed-derived values), WITHOUT
+        the warmup collect. Returns the pre-warmup TrainLoopState and the
+        warmup key (same PRNG schedule as the original monolithic init)."""
         cfg, env = self.cfg, self.env
         key = jax.random.key(cfg.seed)
         key, k_init, k_actor = jax.random.split(key, 3)
@@ -486,8 +501,6 @@ class Trainer:
         if cfg.n_step > 1 and self.mesh is None:
             nstate = nstep_init(cfg.n_step, self.n_actors, env.obs_dim,
                                 env.act_dim)
-        warm = max(cfg.warmup_steps // self.n_actors, 1, cfg.n_step)
-        drop = cfg.n_step - 1
         key, kw = jax.random.split(key)
         step0 = jnp.zeros((), jnp.int32)
 
@@ -505,95 +518,64 @@ class Trainer:
                         env.obs_dim, env.act_dim)
             else:
                 rstate = replay_init(self.dcfg)
+        else:
+            rstate = jnp.zeros((), jnp.int32)   # order token placeholder
+        return TrainLoopState(agent, actors, nstate, rstate, key, step0), kw
+
+    def init_template(self) -> TrainLoopState:
+        """A TrainLoopState with the exact structure/shapes/dtypes of a live
+        one but no warmup executed — the checkpoint-restore template
+        (repro.rl.experiment.Experiment.restore overwrites every leaf)."""
+        ls, _ = self._fresh_state()
+        return ls
+
+    def init(self) -> TrainLoopState:
+        """Agent/actor/replay init + random-policy warmup (paper A.4)."""
+        cfg = self.cfg
+        ls, kw = self._fresh_state()
+        warm = max(cfg.warmup_steps // self.n_actors, 1, cfg.n_step)
+        drop = cfg.n_step - 1
+        if self.use_device:
             warm_j = self._count(jax.jit(partial(
                 self._op_collect_add, self._rand_policy, steps=warm,
                 drop=drop)))
-            actors, nstate, rstate = warm_j(agent["params"], actors, nstate,
-                                            rstate, kw, step0)
+            actors, nstate, rstate = warm_j(ls.agent["params"], ls.actors,
+                                            ls.nstep, ls.replay, kw, ls.step)
+            ls = ls._replace(actors=actors, nstep=nstate, replay=rstate)
         else:
             warm_j = self._count(jax.jit(partial(
                 self._collect_emit, self._rand_policy, steps=warm,
                 drop=drop)))
-            actors, nstate, flat = warm_j(agent["params"], actors, nstate,
-                                          kw)
+            actors, nstate, flat = warm_j(ls.agent["params"], ls.actors,
+                                          ls.nstep, kw)
             self.buffer.add_batch({k: np.asarray(v)
                                    for k, v in flat.items()})
-            rstate = jnp.zeros((), jnp.int32)   # order token placeholder
-        return self._pin(TrainLoopState(agent, actors, nstate, rstate, key,
-                                        step0), put=True)
+            ls = ls._replace(actors=actors, nstep=nstate)
+        return self._pin(ls, put=True)
 
 
 def run_training(cfg: RunConfig, progress: Optional[Callable] = None,
                  mesh=None) -> RunResult:
-    t0 = time.time()
-    trainer = Trainer(cfg, mesh=mesh)
-    ls = trainer.init()
+    """DEPRECATED shim: translate the flat ``RunConfig`` into a typed
+    ``ExperimentSpec`` and delegate to ``repro.rl.experiment.Experiment``.
 
-    returns: List[float] = []
-    eval_steps: List[int] = []
-    sranks: List[int] = []
-    last_metrics: Dict[str, float] = {}
-    last_batch = None
-    last_priorities = None
-    total = cfg.total_steps
+    Seed-for-seed identical to the pre-spec runner (the Experiment drives the
+    same Trainer/superstep/PRNG schedule). Invalid flag combinations that the
+    flat config used to ignore quietly now fail/warn at spec construction:
+    ``replay_backend="host"`` + ``replay_kernel="pallas"`` raises SpecError,
+    ``mesh_shards>0`` + ``loop="python"`` emits a SpecWarning. New code
+    should build an ``ExperimentSpec`` (or a ``repro.rl.presets`` entry) and
+    use the resumable ``Experiment`` handle directly.
+    """
+    import warnings
 
-    if cfg.loop == "scan":
-        # chunk boundaries: every eval point AND (when instrumented) every
-        # srank point, so the scan driver records the exact same
-        # returns/sranks steps as the per-step python loop
-        step = 0
-        while step < total:
-            stops = [(step // cfg.eval_every + 1) * cfg.eval_every, total]
-            if cfg.srank_every:
-                stops.append((step // cfg.srank_every + 1)
-                             * cfg.srank_every)
-            stop = min(stops)
-            do_eval = stop % cfg.eval_every == 0 or stop == total
-            do_srank = bool(cfg.srank_every) and stop % cfg.srank_every == 0
-            want_last = cfg.keep_state and stop == total
-            ls, out = trainer.chunk_fn(stop - step, do_eval, do_srank,
-                                       want_last)(ls)
-            step = stop
-            if do_srank:
-                sranks.append(int(out["srank"]))
-            if want_last:
-                last_batch, last_priorities = out["last"]
-            if do_eval:
-                returns.append(float(np.mean(np.asarray(out["eval"]))))
-                eval_steps.append(step)
-                last_metrics = {k: float(np.asarray(v))
-                                for k, v in out["scal"].items()}
-                if progress:
-                    progress(step, returns[-1], last_metrics)
-    else:
-        if cfg.loop != "python":
-            raise ValueError(f"unknown loop={cfg.loop!r}")
-        metrics = batch = None
-        for step in range(1, total + 1):
-            ls, metrics, batch = trainer.py_step(ls)
-            if cfg.srank_every and step % cfg.srank_every == 0:
-                sranks.append(int(effective_rank(metrics["q_features"])))
-            if step % cfg.eval_every == 0 or step == total:
-                key, ke = jax.random.split(ls.key)
-                ls = ls._replace(key=key)
-                rets = np.asarray(trainer.eval_j(ls.agent["params"], ke))
-                returns.append(float(rets.mean()))
-                eval_steps.append(step)
-                last_metrics = {k: float(np.asarray(v).mean())
-                                for k, v in metrics.items()
-                                if np.asarray(v).ndim == 0}
-                if progress:
-                    progress(step, returns[-1], last_metrics)
-        if cfg.keep_state and metrics is not None:
-            last_batch = batch
-            last_priorities = metrics["priorities"]
-
-    metrics_out = dict(last_metrics,
-                       host_dispatches=float(trainer.dispatches))
-    return RunResult(returns=returns, eval_steps=eval_steps, sranks=sranks,
-                     metrics=metrics_out, param_count=trainer.n_params,
-                     wall_time_s=time.time() - t0,
-                     state=ls.agent if cfg.keep_state else None,
-                     last_batch=last_batch,
-                     last_priorities=(None if last_priorities is None
-                                      else np.asarray(last_priorities)))
+    from repro.rl.experiment import Experiment, ExperimentSpec
+    warnings.warn(
+        "run_training(RunConfig(...)) is a deprecation shim; build an "
+        "ExperimentSpec (repro.rl.experiment) or a repro.rl.presets entry "
+        "and drive the resumable Experiment handle instead",
+        DeprecationWarning, stacklevel=2)
+    spec = ExperimentSpec.from_run_config(cfg)
+    exp = Experiment.from_spec(spec, mesh=mesh)
+    return exp.run(cfg.total_steps, progress=progress, eval_at_end=True,
+                   keep_last=cfg.keep_state)

@@ -1,0 +1,278 @@
+"""Layered experiment API tests: spec-tree validation (invalid combos fail
+at construction, with the legacy RunConfig shim enforcing the same rules),
+to_dict/from_dict serialization incl. unknown-key forward compat, override
+semantics, checkpoint-metadata round-trip through checkpoint/ckpt.py, the
+preset registry building every paper scenario without jit, and save/restore
+resume parity (interrupted == uninterrupted, seed-for-seed, both loop
+drivers x both replay backends)."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.rl import (Experiment, ExperimentSpec, RunConfig, SpecError,
+                      SpecWarning, parse_overrides, presets, run_training)
+
+_SMALL = dict(num_units=16, num_layers=1, use_ofenet=False,
+              distributed=True, n_core=1, n_env=4, total_steps=12,
+              warmup_steps=8, eval_every=3, eval_episodes=1,
+              replay_capacity=256, batch_size=16)
+
+
+def _small(**overrides):
+    return ExperimentSpec().override(**{**_SMALL, **overrides})
+
+
+# --------------------------------------------------------------- validation
+
+def test_field_choice_errors_are_actionable():
+    with pytest.raises(SpecError, match="connectivity"):
+        _small(connectivity="dense_net")
+    with pytest.raises(SpecError, match="activation"):
+        _small(activation="mish")
+    with pytest.raises(SpecError, match="spec.env"):
+        _small(env="ant")
+    with pytest.raises(SpecError, match="loop"):
+        _small(loop="while")
+    with pytest.raises(SpecError, match="batch_size"):
+        _small(batch_size=0)
+
+
+def test_pallas_kernel_requires_device_backend():
+    with pytest.raises(SpecError, match="replay.backend='device'"):
+        _small(replay_backend="host", replay_kernel="pallas")
+    # valid on the device backend
+    _small(replay_backend="device", replay_kernel="pallas")
+
+
+def test_mesh_requires_device_backend_and_divisibility():
+    with pytest.raises(SpecError, match="mesh"):
+        _small(mesh_shards=2, replay_backend="host")
+    with pytest.raises(SpecError, match="divide"):
+        _small(mesh_shards=3, replay_backend="device")  # 3 ∤ n_actors=4
+    with pytest.warns(SpecWarning, match="python"):
+        _small(mesh_shards=2, replay_backend="device", loop="python")
+
+
+def test_fused_blocks_reject_ofenet_batch_norm():
+    with pytest.raises(SpecError, match="fused"):
+        _small(use_ofenet=True, block_backend="fused",
+               **{"ofenet.batch_norm": True})
+    # BN off is the supported paper setting
+    _small(use_ofenet=True, block_backend="fused")
+
+
+def test_runconfig_shim_enforces_spec_rules():
+    """The deprecation shim validates RunConfig-era combos the flat surface
+    used to drop silently."""
+    bad = RunConfig(replay_backend="host", replay_kernel="pallas",
+                    total_steps=1)
+    with pytest.raises(SpecError, match="pallas"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            run_training(bad)
+    with pytest.warns(DeprecationWarning, match="ExperimentSpec"):
+        with pytest.raises(SpecError):
+            run_training(bad)
+
+
+# ------------------------------------------------------------- serialization
+
+def test_dict_round_trip_and_override():
+    spec = _small(algo="td3", replay_backend="device", n_step=3,
+                  loop="scan", **{"network.connectivity": "d2rl"})
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    # dotted path and legacy alias hit the same field
+    assert (spec.override(**{"network.num_units": 64})
+            == spec.override(num_units=64))
+    assert spec.override(num_units=64).network.num_units == 64
+    # overrides never mutate
+    assert spec.network.num_units == 16
+
+
+def test_override_unknown_key_raises():
+    with pytest.raises(SpecError, match="unknown override"):
+        ExperimentSpec().override(num_unitz=64)
+    with pytest.raises(SpecError, match="unknown override"):
+        ExperimentSpec().override(**{"network.width": 64})
+    with pytest.raises(SpecError, match="unknown override"):
+        ExperimentSpec().override(**{"network": 64})  # section, not field
+
+
+def test_from_dict_skips_unknown_keys_forward_compat():
+    spec = _small()
+    d = spec.to_dict()
+    d["future_section"] = {"x": 1}
+    d["network"] = dict(d["network"], future_knob=7)
+    d["version"] = 99
+    with pytest.warns(SpecWarning, match="unknown"):
+        assert ExperimentSpec.from_dict(d) == spec
+
+
+def test_ckpt_metadata_round_trip():
+    """spec -> ckpt.save(metadata=...) -> load_metadata -> from_dict parity
+    (the Experiment.save/restore self-description contract)."""
+    import tempfile, os
+    spec = _small(algo="td3", replay_backend="device",
+                  replay_kernel="pallas", loop="scan", n_step=3)
+    path = os.path.join(tempfile.mkdtemp(), "ck.npz")
+    ckpt.save(path, {"x": jnp.arange(3.0)}, metadata=spec.to_dict())
+    meta = ckpt.load_metadata(path)
+    assert ExperimentSpec.from_dict(meta) == spec
+
+
+def test_parse_overrides_literals_and_strings():
+    ov = parse_overrides(["num_units=64", "replay.backend=device",
+                          "use_ofenet=False", "tau=0.5",
+                          "distributed=false", "prioritized=TRUE"])
+    assert ov == {"num_units": 64, "replay.backend": "device",
+                  "use_ofenet": False, "tau": 0.5,
+                  "distributed": False, "prioritized": True}
+    with pytest.raises(SpecError, match="key=value"):
+        parse_overrides(["oops"])
+
+
+def test_bool_fields_reject_truthy_strings():
+    """A shell-style 'false' that slipped past parsing must fail loudly,
+    never run the wrong ablation as a truthy string."""
+    for key in ("use_ofenet", "distributed", "prioritized",
+                "ofenet.batch_norm"):
+        with pytest.raises(SpecError, match="bool"):
+            _small(**{key: "false"})
+
+
+# ------------------------------------------------------------ preset registry
+
+def test_every_preset_constructs_validates_and_builds():
+    """Tier-1 bitrot guard: the full registry builds Experiments with no
+    jit execution (mirrored by benchmarks.run --smoke)."""
+    assert {"fig1-depth", "fig3-width", "fig5-connectivity", "fig6-ofenet",
+            "fig8-distributed", "table1-ours",
+            "table1-orig"} <= set(presets.names())
+    for name in presets.names():
+        spec = presets.get(name)                      # constructs+validates
+        assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+        exp = Experiment.from_spec(spec)              # builds the Trainer
+        assert exp.step == 0 and exp._ls is None      # nothing executed
+
+
+def test_preset_register_rejects_duplicates_and_junk():
+    with pytest.raises(SpecError, match="unknown preset"):
+        presets.get("fig99-nope")
+    with pytest.raises(SpecError, match="already registered"):
+        presets.register("smoke", presets.get("smoke"))
+    with pytest.raises(SpecError, match="ExperimentSpec"):
+        presets.register("junk-preset", object())
+
+
+# ------------------------------------------------------------- resume parity
+
+def _final_params(exp):
+    return jax.tree_util.tree_leaves(exp._ls.agent["params"])
+
+
+@pytest.mark.parametrize("backend,loop", [("host", "python"),
+                                          ("host", "scan"),
+                                          ("device", "python"),
+                                          ("device", "scan")])
+def test_save_restore_resume_parity(backend, loop, tmp_path):
+    """run(6); save; restore; run(6) bitwise-matches an uninterrupted
+    run(12): identical eval returns AND final agent params, for both loop
+    drivers and both replay backends (split at a chunk boundary — the
+    scan driver's bitwise contract; see Experiment docstring)."""
+    spec = _small(replay_backend=backend, loop=loop)
+    full = Experiment.from_spec(spec)
+    r_full = full.run(12)
+
+    part = Experiment.from_spec(spec)
+    part.run(6)
+    path = str(tmp_path / "ck.npz")
+    part.save(path)
+
+    res = Experiment.restore(path)
+    assert res.spec == spec                      # spec from ckpt metadata
+    assert res.step == 6
+    r_res = res.run(6)
+
+    assert r_res.returns == r_full.returns
+    assert r_res.eval_steps == r_full.eval_steps == [3, 6, 9, 12]
+    for a, b in zip(_final_params(full), _final_params(res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_parity_python_mid_period_split(tmp_path):
+    """The python driver is bitwise under ANY split point (no re-chunking);
+    also exercises n-step returns through the checkpoint."""
+    spec = _small(replay_backend="device", n_step=3)
+    full = Experiment.from_spec(spec)
+    full.run(12)
+    part = Experiment.from_spec(spec)
+    part.run(5)                                   # mid eval period
+    path = str(tmp_path / "ck.npz")
+    part.save(path)
+    res = Experiment.restore(path)
+    r_res = res.run(7)
+    assert r_res.returns == full.result().returns
+    for a, b in zip(_final_params(full), _final_params(res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_parity_scan_mid_period_split_is_close(tmp_path):
+    """A mid-period split under the scan driver re-chunks the scan; floats
+    shift at fusion level but the trajectories stay tightly close (the
+    same caveat as the PR-2 scan-vs-python 1e-4 parity)."""
+    spec = _small(replay_backend="device", loop="scan")
+    full = Experiment.from_spec(spec)
+    r_full = full.run(12)
+    part = Experiment.from_spec(spec)
+    part.run(5)
+    path = str(tmp_path / "ck.npz")
+    part.save(path)
+    res = Experiment.restore(path)
+    r_res = res.run(7)
+    np.testing.assert_allclose(r_res.returns, r_full.returns, rtol=1e-4)
+
+
+def test_restore_preserves_eval_history_and_metrics_rows(tmp_path):
+    spec = _small(loop="scan")
+    exp = Experiment.from_spec(spec)
+    exp.run(6)
+    path = str(tmp_path / "ck.npz")
+    exp.save(path)
+    res = Experiment.restore(path)
+    assert res.returns == exp.returns and res.eval_steps == exp.eval_steps
+    # dispatch accounting continues across the resume
+    assert res.trainer.dispatches == exp.trainer.dispatches
+    rows = list(res.metrics())
+    assert [r["step"] for r in rows] == [3, 6]
+    assert all("return" in r and "critic_loss" in r for r in rows)
+    res.run(6)
+    assert [r["step"] for r in res.metrics()] == [3, 6, 9, 12]
+
+
+def test_restore_without_metadata_fails_loudly(tmp_path):
+    path = str(tmp_path / "bare.npz")
+    ckpt.save(path, {"x": jnp.zeros(2)})
+    with pytest.raises(FileNotFoundError, match="Experiment.save"):
+        Experiment.restore(path)
+
+
+# ---------------------------------------------------------------- shim parity
+
+def test_shim_matches_experiment_api():
+    """Legacy run_training == Experiment.run(eval_at_end=True), including
+    keep_state payloads (the PR-2/PR-3 parity tests run through this)."""
+    spec = _small()
+    exp = Experiment.from_spec(spec)
+    r_new = exp.run(12, eval_at_end=True, keep_last=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        r_old = run_training(spec.to_run_config(keep_state=True))
+    assert r_new.returns == r_old.returns
+    assert r_new.eval_steps == r_old.eval_steps
+    np.testing.assert_array_equal(r_new.last_priorities,
+                                  r_old.last_priorities)
+    assert r_old.state is not None and r_new.state is not None
