@@ -13,8 +13,16 @@ The run surface is a validated spec tree plus a resumable handle
     exp.run(5_000)                         # advance; eval at spec cadence
     exp.save("run.npz")                    # full state + spec metadata
     exp = Experiment.restore("run.npz")    # later / elsewhere
-    exp.run(5_000)                         # seed-exact with run(10_000)
+    exp.run(5_000)                         # BITWISE-equal to run(10_000)
     rows = list(exp.metrics())             # per-eval metric rows
+
+Save/restore is bitwise-reproducible at ANY step, not just at eval-chunk
+boundaries: interrupted and uninterrupted schedules produce identical eval
+returns, final params and replay state under both loop drivers and both
+replay backends (the scan driver's chunk is one ``lax.scan`` with the last
+step's outputs carried through the scan carry, so the superstep compiles
+identically however the run is chunked — see ``Experiment`` /
+``Trainer.chunk_fn``).
 
 Spec tree (``ExperimentSpec``): ``env``/``algo`` plus five sub-specs —
 ``network`` (width/depth/connectivity/activation/``block_backend``),

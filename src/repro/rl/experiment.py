@@ -477,13 +477,16 @@ class Experiment:
     the complete training state through ``repro.checkpoint.ckpt`` with the
     spec in the checkpoint metadata.
 
-    Bitwise-reproducibility contract: the python driver is bitwise under any
-    split point. The scan driver is bitwise when ``run`` calls stop at chunk
-    boundaries (multiples of ``eval.every`` / ``eval.srank_every``); a
-    mid-period stop re-chunks the scan, and the chunk's final unrolled
-    superstep fuses differently from the in-scan body, shifting floats at
-    the ~1e-6 level (same compiled-program caveat as the PR-2 scan/python
-    drivers, which agree to 1e-4, not bitwise).
+    Bitwise-reproducibility contract: ``run(N); save; restore; run(M)`` is
+    bitwise-equal (eval returns, final params, replay state) to an
+    uninterrupted ``run(N + M)`` at ANY split point, under BOTH loop drivers
+    and both replay backends. The python driver never re-chunks, and the
+    scan driver's chunk is one ``lax.scan`` over all its supersteps with the
+    last step's metrics/batch carried through the scan carry
+    (``Trainer.chunk_fn``) — the superstep only ever compiles as the scan
+    body, so re-chunking the same step sequence executes the identical
+    compiled computation per step. (The two DRIVERS still differ from each
+    other at fusion level, ~1e-4 — the guarantee is per-driver.)
     """
 
     def __init__(self, spec: ExperimentSpec, *, mesh=None):
@@ -538,10 +541,10 @@ class Experiment:
         buf = exp.trainer.buffer
         if buf is not None:
             inner = getattr(buf, "_inner", buf)
-            raw = np.load(path)
-            for k in inner.data:
-                inner.data[k][...] = raw[f"host/data/{k}"]
-            inner.tree.tree[...] = raw["host/tree"]
+            with np.load(path) as raw:
+                for k in inner.data:
+                    inner.data[k][...] = raw[f"host/data/{k}"]
+                inner.tree.tree[...] = raw["host/tree"]
             b = st["buffer"]
             inner.ptr = int(b["ptr"])
             inner.count = int(b["count"])
@@ -579,9 +582,12 @@ class Experiment:
         start, end = self.step, self.step + steps
 
         if cfg.loop == "scan":
-            # chunk boundaries: every eval point AND (when instrumented)
-            # every srank point, so the scan driver records the exact same
-            # returns/sranks steps as the per-step python loop
+            # chunks stop at every eval point AND (when instrumented) every
+            # srank point, so the scan driver records the exact same
+            # returns/sranks steps as the per-step python loop. Chunking is
+            # pure scheduling: the superstep only ever compiles as the scan
+            # body, so any chunking of the same step sequence is bitwise-
+            # identical (Trainer.chunk_fn).
             step = start
             while step < end:
                 stops = [(step // cfg.eval_every + 1) * cfg.eval_every, end]
@@ -594,8 +600,8 @@ class Experiment:
                 do_srank = (bool(cfg.srank_every)
                             and stop % cfg.srank_every == 0)
                 want_last = keep_last and stop == end
-                ls, out = trainer.chunk_fn(stop - step, do_eval, do_srank,
-                                           want_last)(ls)
+                ls, out = trainer.chunk_fn(stop - step, do_eval,
+                                           do_srank)(ls)
                 step = stop
                 if do_srank:
                     self.sranks.append(int(out["srank"]))
@@ -672,6 +678,13 @@ class Experiment:
         ``.meta.json`` with the serialized spec, eval history, and the
         host buffer's scalar cursor/RNG state."""
         self._ensure_init()
+        # A mid-period stop can leave the last scan chunk still executing
+        # (its outputs were never fetched), with the host replay's ordered
+        # io_callbacks still mutating the buffer/RNG on the runtime thread —
+        # snapshotting now would tear the checkpoint (buffer arrays final,
+        # RNG mid-chunk). Drain the program AND its effects first.
+        jax.block_until_ready(self._ls)
+        jax.effects_barrier()
         tree: Dict[str, Any] = {"loop": _unkey(self._ls)}
         state: Dict[str, Any] = {
             "step": self.step, "returns": self.returns,

@@ -35,7 +35,11 @@ flags (mapped 1:1 onto spec fields):
   also stop at srank points so both drivers record identical steps; counted
   in
   ``RunResult.metrics["host_dispatches"]``; throughput:
-  benchmarks/loop_fusion.py). The host replay backend rides the scanned
+  benchmarks/loop_fusion.py). A chunk is ONE scan over ALL its supersteps
+  with the last step's metrics/batch carried through the scan carry — the
+  superstep only ever compiles as the scan body, so any re-chunking of the
+  same step sequence is bitwise-identical (the resume-anywhere guarantee;
+  see ``Trainer.chunk_fn``). The host replay backend rides the scanned
   superstep through ordered ``io_callback``s, so both backends are
   seed-for-seed identical across ``loop=`` choices.
 
@@ -48,7 +52,8 @@ flags (mapped 1:1 onto spec fields):
 
 ``RunResult.metrics`` also surfaces the priority-staleness distribution of
 the last sampled batch (``staleness_mean/p50/max`` = learner step - add
-step; -1 on the host backend, which does not stamp rows).
+step) on the device backend; the host backend does not stamp rows, so the
+staleness keys are omitted there.
 """
 from __future__ import annotations
 
@@ -180,10 +185,13 @@ class Trainer:
 
     ``py_step`` runs one superstep as separate host dispatches (the legacy
     debuggable loop); ``chunk_fn`` compiles ``n`` supersteps + optional
-    evaluation/srank into ONE program driven by ``jax.lax.scan``. Both share
-    the same pure ops and PRNG schedule, so they are seed-for-seed
-    interchangeable. ``dispatches`` counts host->device program launches
-    issued through this Trainer (the parity test's traced-call counter).
+    evaluation/srank into ONE program: a single ``jax.lax.scan`` whose carry
+    threads the last step's metrics/batch out, so the superstep compiles
+    identically for every chunk length (bitwise resume at any step). Both
+    drivers share the same pure ops and PRNG schedule, so they are
+    seed-for-seed interchangeable. ``dispatches`` counts host->device
+    program launches issued through this Trainer (the parity test's
+    traced-call counter).
     """
 
     def __init__(self, cfg, mesh=None):
@@ -393,17 +401,16 @@ class Trainer:
     def _finish_step(self, ls, agent, actors, nstate, rstate, key,
                      staleness, metrics, batch):
         """Shared superstep tail: staleness metrics + next TrainLoopState.
-        Keeping this single keeps the scan/python drivers seed-exact."""
-        metrics = dict(metrics,
-                       staleness_mean=staleness.mean(),
-                       staleness_p50=jnp.median(staleness),
-                       staleness_max=staleness.max())
+        Keeping this single keeps the scan/python drivers seed-exact.
+        ``staleness=None`` (host replay: rows carry no add-step stamps)
+        omits the staleness keys instead of reporting a bogus sentinel."""
+        if staleness is not None:
+            metrics = dict(metrics,
+                           staleness_mean=staleness.mean(),
+                           staleness_p50=jnp.median(staleness),
+                           staleness_max=staleness.max())
         ls = TrainLoopState(agent, actors, nstate, rstate, key, ls.step + 1)
         return ls, metrics, batch
-
-    def _host_staleness(self):
-        # host buffer rows carry no add-step stamps: sentinel -1
-        return jnp.full((self.cfg.batch_size,), -1.0, jnp.float32)
 
     def _superstep(self, ls: TrainLoopState):
         """One pure collect->add->sample->update->refresh step — the scan
@@ -431,7 +438,7 @@ class Trainer:
         io_callback(self._cb_update, jax.ShapeDtypeStruct((), jnp.int32),
                     idx, metrics["priorities"], ordered=True)
         return self._finish_step(ls, agent, actors, nstate, ls.replay, key,
-                                 self._host_staleness(), metrics, batch)
+                                 None, metrics, batch)
 
     # ----------------------------------------------------------- drivers
     def py_step(self, ls: TrainLoopState):
@@ -450,26 +457,45 @@ class Trainer:
         agent, metrics = self._update_j(ls.agent, batch, ku)
         self.buffer.update_priorities(idx, np.asarray(metrics["priorities"]))
         return self._finish_step(ls, agent, actors, nstate, ls.replay, key,
-                                 self._host_staleness(), metrics, batch)
+                                 None, metrics, batch)
 
-    def chunk_fn(self, n_steps: int, do_eval: bool, do_srank: bool,
-                 want_last: bool) -> Callable:
-        """``n_steps`` supersteps (+ optional eval / srank / final batch) as
-        ONE jitted program: scan over the superstep, then a final unrolled
-        superstep whose full metrics feed srank and the result payload."""
-        sig = (n_steps, do_eval, do_srank, want_last)
+    def chunk_fn(self, n_steps: int, do_eval: bool,
+                 do_srank: bool = False) -> Callable:
+        """``n_steps`` supersteps (+ optional eval) as ONE jitted program.
+
+        The chunk is a single ``lax.scan`` over ALL ``n_steps`` supersteps;
+        the last step's metrics and sampled batch ride the scan CARRY (seeded
+        with zero templates the first iteration overwrites), so there is no
+        trailing unrolled superstep. The superstep therefore only ever
+        compiles as the scan body — one uniform HLO computation regardless of
+        chunk length — which is what makes any re-chunking of the same step
+        sequence (and hence save/restore at ANY step) bitwise-identical.
+        srank and the final batch/priorities are computed from the carried
+        outputs in the EPILOGUE, outside the scan — epilogue variation
+        (eval/srank) cannot change how the body compiles, so ``do_eval`` /
+        ``do_srank`` only select what the chunk returns. ``want_last`` is
+        gone from the signature entirely (the last batch/priorities are
+        always available from the carry), shrinking the compile-cache key
+        space to (n_steps, do_eval, do_srank)."""
+        do_srank = do_srank and bool(self.cfg.srank_every)
+        sig = (n_steps, do_eval, do_srank)
         if sig in self._chunks:
             return self._chunks[sig]
 
         def chunk(ls: TrainLoopState):
-            if n_steps > 1:
-                def body(c, _):
-                    c, _m, _b = self._superstep(c)
-                    return c, None
-                ls, _ = jax.lax.scan(body, ls, None, length=n_steps - 1)
-            ls, metrics, batch = self._superstep(ls)
+            _, m_t, b_t = jax.eval_shape(self._superstep, ls)
+            zeros = partial(jax.tree_util.tree_map,
+                            lambda s: jnp.zeros(s.shape, s.dtype))
+
+            def body(carry, _):
+                c, _m, _b = carry
+                return self._superstep(c), None
+
+            (ls, metrics, batch), _ = jax.lax.scan(
+                body, (ls, zeros(m_t), zeros(b_t)), None, length=n_steps)
             out = {"scal": {k: v for k, v in metrics.items()
-                            if getattr(v, "ndim", None) == 0}}
+                            if getattr(v, "ndim", None) == 0},
+                   "last": (batch, metrics["priorities"])}
             if do_srank:
                 out["srank"] = effective_rank(metrics["q_features"])
             if do_eval:
@@ -478,8 +504,6 @@ class Trainer:
                 out["eval"] = eval_returns(self.env, self.mean_fn,
                                            ls.agent["params"], ke,
                                            self.cfg.eval_episodes)
-            if want_last:
-                out["last"] = (batch, metrics["priorities"])
             return self._pin(ls), out
 
         self._chunks[sig] = self._count(jax.jit(chunk))
