@@ -10,6 +10,13 @@ step's metrics/batch through the scan carry (the bitwise resume-anywhere
 contract, PR 5); these rows confirm the carried outputs do not regress the
 dispatch-amortization win.
 
+The obs rows measure the telemetry tax on the scan driver: obs off vs the
+default ``obs.log_every=50`` stream vs a pathological per-step stream
+(``log_every=1``). The stream is emitted as stacked scan outputs and
+downsampled on the host, so the cost is one extra device->host fetch per
+chunk — the acceptance bar is < 5% at the default cadence
+(experiments/bench_results.json).
+
 Timed via ``rl.runner.Trainer`` directly (warm call first, so compile time
 is excluded). The 4-fake-device mesh legs run in a subprocess because
 ``--xla_force_host_platform_device_count`` must be set before jax init;
@@ -28,29 +35,39 @@ import sys
 import time
 
 
-def _cfg(loop, steps, mesh_shards=0):
-    from repro.rl.runner import RunConfig
-    return RunConfig(env="pendulum", algo="sac", num_units=32, num_layers=1,
-                     use_ofenet=False, distributed=True, n_core=1, n_env=16,
-                     total_steps=steps, warmup_steps=64, eval_every=steps,
-                     batch_size=64, replay_capacity=4096,
-                     replay_backend="device", loop=loop,
-                     mesh_shards=mesh_shards)
+def _spec(loop, steps, mesh_shards=0, **obs):
+    from repro.rl import ExperimentSpec
+    kw = {"obs." + k: v for k, v in obs.items()}
+    return ExperimentSpec().override(
+        env="pendulum", algo="sac", num_units=32, num_layers=1,
+        use_ofenet=False, distributed=True, n_core=1, n_env=16,
+        total_steps=steps, warmup_steps=64, eval_every=steps,
+        batch_size=64, replay_capacity=4096,
+        replay_backend="device", loop=loop, mesh_shards=mesh_shards, **kw)
 
 
 def _timed_pass(trainer, loop: str, steps: int):
-    """One warm Trainer + a closure timing one full ``steps``-long pass."""
+    """One warm Trainer + a closure timing one full ``steps``-long pass.
+    When the trainer's spec has obs enabled, the timed region includes the
+    obs host path (stream fetch + absolute-step downsample into a memory
+    sink), like ``Experiment.run``'s."""
     import jax
+    from repro.obs.stream import ObsRun
+    obs = ObsRun(trainer.spec.obs)
     ls = trainer.init()
     if loop == "scan":
         chunk = trainer.chunk_fn(steps, False)
         ls, _ = chunk(ls)                       # compile + warm
         jax.block_until_ready(ls.agent["params"])
-        state = {"ls": ls}
+        state = {"ls": ls, "step": 0}
 
         def one():
             t0 = time.time()
-            state["ls"], _ = chunk(state["ls"])
+            state["ls"], out = chunk(state["ls"])
+            if "stream" in out:
+                obs.flush_chunk(state["step"],
+                                jax.device_get(out["stream"]))
+                state["step"] += steps
             jax.block_until_ready(state["ls"].agent["params"])
             return time.time() - t0
         return one
@@ -73,7 +90,7 @@ def steps_per_sec(loop: str, steps: int, mesh_shards: int = 0,
     a warm call (compile excluded; min-of-reps rejects scheduler noise the
     way benchmarks/dense_stack.py does)."""
     from repro.rl.runner import Trainer
-    one = _timed_pass(Trainer(_cfg(loop, steps, mesh_shards)), loop, steps)
+    one = _timed_pass(Trainer(_spec(loop, steps, mesh_shards)), loop, steps)
     return steps / min(one() for _ in range(reps))
 
 
@@ -83,7 +100,7 @@ def both_steps_per_sec(steps: int, mesh_shards: int = 0,
     drivers sample the same host-load environment and the reported ratio
     is not an artifact of when each driver happened to be measured."""
     from repro.rl.runner import Trainer
-    ones = {loop: _timed_pass(Trainer(_cfg(loop, steps, mesh_shards)),
+    ones = {loop: _timed_pass(Trainer(_spec(loop, steps, mesh_shards)),
                               loop, steps)
             for loop in ("python", "scan")}
     best = {loop: float("inf") for loop in ones}
@@ -91,6 +108,27 @@ def both_steps_per_sec(steps: int, mesh_shards: int = 0,
         for loop, one in ones.items():
             best[loop] = min(best[loop], one())
     return {loop: steps / b for loop, b in best.items()}
+
+
+def obs_overhead_steps_per_sec(steps: int, reps: int = 5) -> dict:
+    """Scan-driver steps/sec with telemetry off / default / per-step, reps
+    interleaved like ``both_steps_per_sec``. Keys: "off", "every50",
+    "every1"."""
+    from repro.rl.runner import Trainer
+    variants = {
+        "off": {},
+        "every50": dict(enabled=True, log_every=50, grad_norms=True),
+        "every1": dict(enabled=True, log_every=1, grad_norms=True),
+    }
+    ones = {}
+    for tag, obs in variants.items():
+        spec = _spec("scan", steps, **obs)
+        ones[tag] = _timed_pass(Trainer(spec), "scan", steps)
+    best = {tag: float("inf") for tag in ones}
+    for _ in range(reps):
+        for tag, one in ones.items():
+            best[tag] = min(best[tag], one())
+    return {tag: steps / b for tag, b in best.items()}
 
 
 _MESH_SCRIPT = r"""
@@ -141,6 +179,14 @@ def run(scale: str = "quick"):
     sps_py, sps_sc = sps["python"], sps["scan"]
     emit("python_1shard", sps_py)
     emit("scan_1shard", sps_sc, sps_sc / sps_py)
+    # the telemetry tax is a few ms of host work per CHUNK, so resolving
+    # it needs passes much longer than the python-vs-scan comparison
+    # (64-step passes are ~15ms and drown the signal in scheduler noise)
+    obs = obs_overhead_steps_per_sec(512 if scale == "quick" else 2048)
+    emit("obs_off", obs["off"])
+    # ratio here = throughput retained with the stream on (1.00 = free)
+    emit("obs_every50", obs["every50"], obs["every50"] / obs["off"])
+    emit("obs_every1", obs["every1"], obs["every1"] / obs["off"])
     mesh = _mesh_rows(mesh_steps)
     emit("python_mesh4", mesh["python"])
     emit("scan_mesh4", mesh["scan"], mesh["scan"] / mesh["python"])

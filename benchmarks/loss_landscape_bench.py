@@ -23,7 +23,7 @@ def run(scale: str = "quick"):
         # fig4-grid is the plain-MLP single-actor scenario this study needs
         spec = make_spec(scale, "fig4-grid", n_env=1, **shp)
         env = make_env(spec.env)
-        acfg, *_ = _build(spec.to_run_config(), env)
+        acfg, *_ = _build(spec, env)
         res = Experiment.from_spec(spec).run(eval_at_end=True,
                                              keep_last=True)
         state, batch = res.state, res.last_batch

@@ -3,6 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV per the harness contract and merges
 the full rows into experiments/bench_results.json (rows with the same name
 are replaced, others are kept, so ``--only`` reruns never drop results).
+Every stored row is stamped with a ``host`` fingerprint (platform, CPU
+count, jax version/backend) and ``recorded_at``, so a ratio in the
+committed JSON is traceable to the box and build that produced it — and
+mixed-provenance files are detectable. Ratio rows additionally embed their
+same-run baseline (see ``loop_fusion.both_steps_per_sec``: the baseline
+reps are interleaved with the measured ones on the same box, so the ratio
+is never an artifact of when each side was measured).
 
   PYTHONPATH=src python -m benchmarks.run [--scale quick|paper] [--only fig5]
 
@@ -12,10 +19,25 @@ benchmarks (dense_stack, loop_fusion) — failures fatal instead of
 swallowed, results written to experiments/bench_smoke.json.
 """
 import argparse
+import datetime
 import importlib
 import json
+import os
+import platform
 import time
 from pathlib import Path
+
+
+def host_fingerprint() -> dict:
+    """The box + build a row was measured on (stamped into every row)."""
+    import jax
+    return {"platform": platform.platform(),
+            "machine": platform.machine(),
+            "cpus": os.cpu_count(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "n_devices": jax.device_count()}
 
 MODULES = [
     "benchmarks.presets_smoke",
@@ -84,6 +106,10 @@ def main() -> None:
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
         all_rows.extend(rows)
+    stamp = {"host": host_fingerprint(),
+             "recorded_at": datetime.datetime.now(
+                 datetime.timezone.utc).isoformat(timespec="seconds")}
+    all_rows = [{**r, **stamp} for r in all_rows]
     out = Path("experiments/bench_smoke.json" if args.smoke
                else "experiments/bench_results.json")
     _merge_write(out, all_rows)

@@ -12,6 +12,16 @@ with optional checkpoint/resume through the run handle.
     PYTHONPATH=src python examples/quickstart.py [--steps 2000]
         [--override network.num_units=256] [--override replay.backend=device]
         [--ckpt run.npz] [--resume run.npz]
+
+Diagnosing instability: pass ``--log-dir runs/a`` to stream per-step
+telemetry (losses, grad norms, update ratios) into ``runs/a/metrics.jsonl``
+without changing a single trained bit, then summarize with
+
+    PYTHONPATH=src python -m repro.obs.report runs/a
+
+The report flags loss spikes (>10x the run median), non-finite values and
+srank collapse. Add ``--trace 2`` to also capture a jax.profiler trace of
+the first two chunk dispatches under ``<log-dir>/trace`` for TensorBoard.
 """
 import argparse
 
@@ -30,6 +40,12 @@ def main():
     ap.add_argument("--ckpt", default="", help="save the run handle here")
     ap.add_argument("--resume", default="",
                     help="restore a --ckpt checkpoint and keep training")
+    ap.add_argument("--log-dir", default="",
+                    help="stream telemetry to <dir>/metrics.jsonl "
+                         "(summarize: python -m repro.obs.report <dir>)")
+    ap.add_argument("--trace", type=int, default=0, metavar="N",
+                    help="profile the first N chunk dispatches "
+                         "into <log-dir>/trace (needs --log-dir)")
     args = ap.parse_args()
 
     if args.resume:
@@ -39,11 +55,21 @@ def main():
         exp = Experiment.restore(args.resume)
         print(f"resumed at step {exp.step} (spec from checkpoint metadata)")
     else:
+        obs = {}
+        if args.log_dir:
+            obs = {"obs.enabled": True, "obs.sinks": ("jsonl",),
+                   "obs.log_dir": args.log_dir, "obs.trace": args.trace,
+                   # ~100 train rows whatever the budget (cap at the
+                   # ObsSpec default cadence of 50)
+                   "obs.log_every": max(1, min(50, args.steps // 100))}
+        elif args.trace:
+            ap.error("--trace needs --log-dir (traces land in "
+                     "<log-dir>/trace)")
         spec = presets.get("quickstart").override(
             num_units=args.units or 128, total_steps=args.steps,
             eval_every=max(args.steps // 8, 1),
             srank_every=max(args.steps // 8, 1),
-            **parse_overrides(args.override))
+            **obs, **parse_overrides(args.override))
         exp = Experiment.from_spec(spec)
 
     res = exp.run(args.steps, progress=lambda s, r, m: print(
@@ -54,6 +80,10 @@ def main():
     if args.ckpt:
         exp.save(args.ckpt)
         print(f"checkpoint -> {args.ckpt}  (resume with --resume {args.ckpt})")
+    exp.close()
+    if args.log_dir:
+        print(f"telemetry -> {args.log_dir}/metrics.jsonl  "
+              f"(summarize: python -m repro.obs.report {args.log_dir})")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,11 @@ dotted paths or legacy flat aliases), replacing the old grown flag list:
         [--override replay.backend=host] [--override replay.kernel=pallas]
         [--override execution.loop=python] [--override replay.n_step=3]
         [--override network.block_backend=fused]
+
+Telemetry rides the same overrides: ``--override obs.enabled=true
+--override obs.sinks=jsonl --override obs.log_dir=runs/abl`` streams
+per-variant diagnostics without perturbing the trained bits (see
+``repro.obs``).
 """
 import argparse
 

@@ -13,6 +13,8 @@ import os
 from pathlib import Path
 from typing import Any, Optional
 
+from repro.obs.trace import annotate
+
 import jax
 import numpy as np
 
@@ -28,15 +30,17 @@ def _flatten(tree: Any):
 
 
 def save(path: str, tree: Any, *, metadata: Optional[dict] = None) -> None:
-    items, _ = _flatten(tree)
-    arrays = {k: np.asarray(v) for k, v in items.items()}
-    p = Path(path)
-    p.parent.mkdir(parents=True, exist_ok=True)
-    tmp = str(p) + ".tmp"
-    np.savez(tmp, **arrays)
-    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, str(p))
-    if metadata is not None:
-        Path(str(p) + ".meta.json").write_text(json.dumps(metadata, indent=1))
+    with annotate("repro.ckpt.save"):
+        items, _ = _flatten(tree)
+        arrays = {k: np.asarray(v) for k, v in items.items()}
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = str(p) + ".tmp"
+        np.savez(tmp, **arrays)
+        os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, str(p))
+        if metadata is not None:
+            Path(str(p) + ".meta.json").write_text(
+                json.dumps(metadata, indent=1))
 
 
 def restore(path: str, template: Any, *, shardings: Any = None) -> Any:
@@ -45,25 +49,26 @@ def restore(path: str, template: Any, *, shardings: Any = None) -> Any:
     ``shardings``: optional matching pytree of jax.sharding.Sharding — leaves
     are device_put with them (multi-pod restore path).
     """
-    data = np.load(path, allow_pickle=False)
-    items, treedef = _flatten(template)
-    flat_shard = None
-    if shardings is not None:
-        shard_items, _ = _flatten(shardings)
-        flat_shard = shard_items
-    leaves = []
-    for key, tmpl in items.items():
-        if key not in data:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = data[key]
-        if tuple(arr.shape) != tuple(np.shape(tmpl)):
-            raise ValueError(f"shape mismatch for {key}: "
-                             f"{arr.shape} vs {np.shape(tmpl)}")
-        if flat_shard is not None and key in flat_shard:
-            leaves.append(jax.device_put(arr, flat_shard[key]))
-        else:
-            leaves.append(jax.numpy.asarray(arr))
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+    with annotate("repro.ckpt.restore"):
+        data = np.load(path, allow_pickle=False)
+        items, treedef = _flatten(template)
+        flat_shard = None
+        if shardings is not None:
+            shard_items, _ = _flatten(shardings)
+            flat_shard = shard_items
+        leaves = []
+        for key, tmpl in items.items():
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(np.shape(tmpl)):
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {np.shape(tmpl)}")
+            if flat_shard is not None and key in flat_shard:
+                leaves.append(jax.device_put(arr, flat_shard[key]))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def load_metadata(path: str) -> Optional[dict]:

@@ -85,6 +85,22 @@ def tree_bytes(tree: Any) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
 
 
+def tree_l2_norm(tree: Any) -> jax.Array:
+    """Global L2 norm over every leaf of a pytree (grad/update diagnostics)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in leaves))
+
+
+def tree_update_ratio(new: Any, old: Any, eps: float = 1e-12) -> jax.Array:
+    """||new - old|| / ||old||: the per-step relative parameter movement.
+
+    The classic network-health signal — a healthy run sits around 1e-3/1e-4;
+    spikes flag exploding updates, a collapse to ~0 flags dead optimization.
+    """
+    delta = jax.tree_util.tree_map(lambda a, b: a - b, new, old)
+    return tree_l2_norm(delta) / (tree_l2_norm(old) + eps)
+
+
 def ema_update(target: Any, online: Any, tau: float) -> Any:
     """Polyak averaging: target <- tau*online + (1-tau)*target (paper A.1)."""
     return jax.tree_util.tree_map(lambda t, o: (1.0 - tau) * t + tau * o, target, online)

@@ -10,7 +10,7 @@ Two granularities:
 * ``stack.py`` — the whole L-layer stack in one pass, forward AND backward
   (``jax.custom_vjp``). This is what ``core.blocks.mlp_block_apply``
   routes to under ``backend="fused"`` and what SAC/TD3/OFENet train
-  through via ``RunConfig(block_backend="fused")``.
+  through via ``ExperimentSpec`` ``network.block_backend="fused"``.
 
 Stream-in-VMEM layout (stack.py): a per-batch-tile VMEM scratch holds the
 growing concat stream —

@@ -33,7 +33,8 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, *,
 
 def make_actor_mesh(n_data: int):
     """Data-only mesh for the RL runner's sharded actor/replay path
-    (``rl.runner.RunConfig(mesh_shards=n)``): one ``data`` slice per replay
+    (``ExperimentSpec`` ``execution.mesh_shards=n``): one ``data`` slice
+    per replay
     shard / actor-pool slice, no model axis. Works on real devices or a
     ``--xla_force_host_platform_device_count`` fake CPU mesh."""
     return jax.make_mesh((int(n_data),), ("data",))

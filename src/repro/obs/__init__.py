@@ -1,0 +1,62 @@
+"""repro.obs — in-loop observability: metric streams, sinks, traces, report.
+
+The training loop is a jitted ``lax.scan`` black box between eval points;
+this package opens it up without perturbing it. Four pieces:
+
+* **Metric stream** (``stream.ObsRun``): the scan superstep emits every
+  scalar training metric per step as stacked scan outputs; the chunk
+  epilogue hands the stacked arrays to ``ObsRun.flush_chunk`` which
+  downsamples against ABSOLUTE steps (``step % log_every == 0``) and writes
+  rows. Downsampling on the host from an always-full stream keeps the scan
+  body's codegen uniform across chunk lengths and obs knobs — enabling obs
+  changes training outputs bitwise not at all, and the PR-5 resume-anywhere
+  contract holds with a sink attached (tests/test_obs.py).
+* **Sinks** (``writers``): the ``MetricWriter`` protocol with JSONL / CSV /
+  in-memory implementations behind one ``BufferedWriter`` (async daemon
+  thread, ordered, drained by the same barrier ``Experiment.save`` uses).
+* **Trace hooks** (``trace``): ``jax.profiler`` named scopes around chunk
+  dispatch / eval / checkpoint save / replay callbacks, plus
+  ``ObsSpec(trace=N)`` capturing a profiler trace of the first N chunks
+  into ``<log_dir>/trace/``.
+* **Run report** (``report``): ``python -m repro.obs.report <run_dir>``
+  summarizes throughput, grad-norm/staleness trajectories and flags
+  instability events (spikes, non-finite values, srank collapse).
+
+Configuration is ``ObsSpec`` in the ``ExperimentSpec`` tree
+(``repro.rl.experiment``): ``enabled``, ``log_every``, ``sinks``,
+``grad_norms``, ``trace``, ``log_dir``.
+
+Row schema (one JSON object per ``metrics.jsonl`` line; CSV mirrors the
+train rows' columns):
+
+    {"kind": "train", "step": <int>, <metric>: <float>, ...}
+        metrics: critic_loss, actor_loss, aux_loss (OFENet), alpha (SAC),
+        q_mean, td_error, staleness_mean/p50/max (device replay only), and
+        with ``grad_norms`` on: grad_norm_{actor,critics,ofenet} plus
+        update_ratio_{actor,critics,ofenet} (||step Δ|| / ||params||).
+    {"kind": "eval", "step": <int>, "return": <float>, ...scalars}
+    {"kind": "event", "event": "chunk"|"run"|"srank"|"save"|"restore"|
+        "trace", "step": <int>, ...}
+        "chunk": steps, wall_s, steps_per_sec       (scan driver timing)
+        "run":   steps, wall_s, steps_per_sec, host_dispatches,
+                 chunk_compiles                     (per run() call)
+        "srank": srank                              (eval.srank_every)
+        "save"/"restore": path                      (checkpoint markers)
+        "trace": status, dir                        (profiler capture)
+
+A resumed run appends to the same files; readers (the report CLI) keep the
+LAST row per (kind, step, event), so replayed steps are reported once.
+"""
+from repro.obs.stream import ObsRun
+from repro.obs.trace import TraceCapture, annotate
+from repro.obs.writers import (SINKS, BufferedWriter, CsvWriter, JsonlWriter,
+                               MemoryWriter, MetricWriter, make_writer)
+
+
+def __getattr__(name):
+    # lazy: importing report at package load would shadow the
+    # `python -m repro.obs.report` entry point (runpy double-import warning)
+    if name in ("load_rows", "summarize"):
+        from repro.obs import report
+        return getattr(report, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -21,16 +21,16 @@ host -> device (learner update). This subsystem keeps the whole
   ``collect_and_add_sharded`` fuses actor stepping with the replay add into
   a single ``shard_map`` program.
 
-Backend switch: ``rl.runner.RunConfig(replay_backend="host" | "device",
-replay_kernel="xla" | "pallas")``. With ``"device"`` the runner threads the
-functional ``ReplayState`` through jitted add/sample/update steps — no
+Backend switch: ``ExperimentSpec`` ``replay.backend = "host" | "device"``,
+``replay.kernel = "xla" | "pallas"``. With ``"device"`` the runner threads
+the functional ``ReplayState`` through jitted add/sample/update steps — no
 per-step host<->device transfer of the replay store (see
 examples/rl_distributed.py and benchmarks/replay_micro.py). Because every
 operation is pure, the runner's ``loop="scan"`` superstep carries the whole
 ReplayState through ``jax.lax.scan`` — and on a mesh
-(``RunConfig(mesh_shards=n)``) through ``collect_and_add_sharded`` /
+(``execution.mesh_shards=n``) through ``collect_and_add_sharded`` /
 ``sharded_replay_sample`` inside the same scanned chunk. ``store.nstep_*``
-roll n-step returns (``RunConfig(n_step=3)``) on device in the add path;
+roll n-step returns (``replay.n_step=3``) on device in the add path;
 ``ReplayState["add_step"]`` stamps rows for the priority-staleness metric.
 """
 from repro.replay.device import (DeviceReplay, DeviceReplayConfig,

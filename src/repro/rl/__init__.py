@@ -24,19 +24,41 @@ step's outputs carried through the scan carry, so the superstep compiles
 identically however the run is chunked — see ``Experiment`` /
 ``Trainer.chunk_fn``).
 
-Spec tree (``ExperimentSpec``): ``env``/``algo`` plus five sub-specs —
+Spec tree (``ExperimentSpec``): ``env``/``algo`` plus six sub-specs —
 ``network`` (width/depth/connectivity/activation/``block_backend``),
 ``ofenet`` (decoupled representation), ``replay``
 (host|device backend, xla|pallas kernel, capacity, PER, n-step),
 ``execution`` (python|scan loop driver, mesh shards, batch, steps, Ape-X
-actor pool, seed) and ``eval`` (cadence, episodes, srank). Invalid values
-and unsupported combinations (e.g. ``replay.kernel="pallas"`` on the host
-backend, the fused block kernel with OFENet batch norm, mesh sharding on
-the host replay) raise ``SpecError`` at construction; valid-but-degraded
-combinations (python loop on a mesh) raise ``SpecWarning``. Specs
-serialize via ``to_dict``/``from_dict`` (unknown keys skipped with a
-warning — forward compat) and sweep via ``override`` with dotted paths or
-the flat legacy aliases.
+actor pool, seed), ``eval`` (cadence, episodes, srank) and ``obs``
+(telemetry, below). Invalid values and unsupported combinations (e.g.
+``replay.kernel="pallas"`` on the host backend, the fused block kernel with
+OFENet batch norm, mesh sharding on the host replay) raise ``SpecError`` at
+construction; valid-but-degraded combinations (python loop on a mesh) raise
+``SpecWarning``. Specs serialize via ``to_dict``/``from_dict`` (unknown
+keys skipped with a warning — forward compat) and sweep via ``override``
+with dotted paths or the flat legacy aliases.
+
+Observability (``repro.obs``, configured by ``ObsSpec``)::
+
+    spec = spec.override(**{"obs.enabled": True,
+                            "obs.sinks": ("jsonl",),
+                            "obs.log_dir": "runs/exp0",
+                            "obs.log_every": 50})
+    Experiment.from_spec(spec).run()
+    # then: python -m repro.obs.report runs/exp0
+
+The scan driver streams every per-step scalar training metric out of the
+jitted chunk as stacked scan outputs and flushes them in the chunk epilogue;
+the python driver logs per step. Rows flow through an async buffered writer
+into the configured sinks (``jsonl`` / ``csv`` / ``memory``).
+``obs.grad_norms`` adds per-network gradient-norm + update-ratio taps;
+``obs.trace=N`` captures a ``jax.profiler`` trace of the first N chunks.
+Enabling obs changes training outputs bitwise NOT AT ALL, and the
+save/restore contract above holds with sinks attached — the stream is
+always emitted inside the scan and downsampled on the host against absolute
+steps, so obs knobs never touch the compiled body (tests/test_obs.py).
+``python -m repro.obs.report <log_dir>`` summarizes throughput, grad-norm /
+staleness trajectories and instability events from the stream.
 
 Presets (``repro.rl.presets``): every paper scenario by name —
 ``fig1-depth``, ``fig3-width``, ``fig4-grid``, ``fig5-connectivity``,
@@ -45,16 +67,14 @@ Presets (``repro.rl.presets``): every paper scenario by name —
 ``quickstart``, ``rl-distributed`` and ``smoke``. All ``benchmarks/fig*.py``
 and ``examples/`` build through ``presets.get(name).override(...)``.
 
-Deprecation path: the flat ``RunConfig`` + one-shot ``run_training`` remain
-as thin shims that translate to a spec and delegate to ``Experiment``,
-seed-for-seed. They now validate the combos the flat surface used to drop
-silently (host replay + pallas kernel raises; mesh + python loop warns) and
-emit a ``DeprecationWarning``; new code should build specs or presets.
+The flat ``RunConfig`` + one-shot ``run_training`` are gone: their
+deprecation period ended and both names now raise ``RuntimeError`` with a
+porting recipe (every flat field still works as an ``override`` alias).
 """
 from repro.rl.envs import ENVS, EnvSpec, make_env, rollout_return
 from repro.rl.runner import RunConfig, RunResult, run_training
 from repro.rl.experiment import (EvalSpec, ExecutionSpec, Experiment,
-                                 ExperimentSpec, NetworkSpec, OFENetSpec,
-                                 ReplaySpec, SpecError, SpecWarning,
-                                 parse_overrides)
+                                 ExperimentSpec, NetworkSpec, ObsSpec,
+                                 OFENetSpec, ReplaySpec, SpecError,
+                                 SpecWarning, parse_overrides)
 from repro.rl import presets

@@ -11,7 +11,9 @@ instead of the flat 22-field ``RunConfig``:
     ├── replay:    ReplaySpec     backend / kernel / capacity / PER / n-step
     ├── execution: ExecutionSpec  loop driver / mesh shards / batch / steps /
     │                             Ape-X actor pool / seed
-    └── eval:      EvalSpec       eval cadence + srank instrumentation
+    ├── eval:      EvalSpec       eval cadence + srank instrumentation
+    └── obs:       ObsSpec        in-loop telemetry: metric stream cadence,
+                                  sinks, grad-norm taps, profiler trace
 
 Every field is choice-checked at construction and unsupported combinations
 are rejected with actionable messages (``SpecError``) instead of failing
@@ -41,8 +43,16 @@ NumPy arrays + sum tree + RNG state when ``replay.backend="host"``, and the
 accumulated eval history — through ``repro.checkpoint.ckpt`` with the spec
 serialized into the checkpoint metadata, so a checkpoint is self-describing.
 
-Paper scenarios are named in ``repro.rl.presets``; ``RunConfig`` /
-``run_training`` remain as deprecation shims over this API.
+With ``obs.enabled`` the run additionally streams per-step training
+diagnostics (``repro.obs``): the scan driver flushes each chunk's stacked
+scalar stream to the configured sinks, the python driver logs per step, and
+``save`` drains the async writer next to the same effects barrier that
+drains the host-replay callbacks. Enabling obs changes training outputs
+bitwise not at all (tests/test_obs.py).
+
+Paper scenarios are named in ``repro.rl.presets``. The flat ``RunConfig`` /
+``run_training`` surface is gone — both names now raise with a porting
+message (``repro.rl.runner``).
 """
 from __future__ import annotations
 
@@ -61,8 +71,11 @@ from repro.core.blocks import BLOCK_BACKENDS, CONNECTIVITIES
 from repro.core.effective_rank import effective_rank
 from repro.core.ofenet import OFENetConfig
 from repro.common import ACTIVATIONS
+from repro.obs.stream import ObsRun
+from repro.obs.trace import annotate
+from repro.obs.writers import SINKS
 from repro.rl.envs import ENVS
-from repro.rl.runner import RunConfig, RunResult, Trainer, TrainLoopState
+from repro.rl.runner import RunResult, Trainer, TrainLoopState
 
 ALGOS = ("sac", "td3")
 REPLAY_BACKENDS = ("host", "device")
@@ -211,6 +224,48 @@ class EvalSpec:
         _positive("eval", "srank_every", self.srank_every, minimum=0)
 
 
+@dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """In-loop telemetry (``repro.obs``): stream cadence, sinks, traces.
+
+    Enabling obs never perturbs training: the scan body always emits its
+    scalar metrics in full and downsampling happens on the host, so outputs
+    are bitwise-identical with obs on or off, and resume stays bitwise with
+    a sink attached. ``grad_norms`` adds per-network gradient/update-ratio
+    taps to the algo update (pure consumers of existing gradients).
+    ``trace=N`` captures a ``jax.profiler`` trace of the first N chunks
+    into ``<log_dir>/trace/``."""
+    enabled: bool = False
+    log_every: int = 50                # absolute-step cadence of train rows
+    sinks: Tuple[str, ...] = ("memory",)   # jsonl | csv | memory
+    grad_norms: bool = True            # per-net grad/update-ratio metrics
+    trace: int = 0                     # profile the first N chunks (0 = off)
+    log_dir: str = ""                  # required by jsonl/csv/trace
+
+    def __post_init__(self):
+        _boolean("obs", "enabled", self.enabled)
+        _boolean("obs", "grad_norms", self.grad_norms)
+        _positive("obs", "log_every", self.log_every)
+        _positive("obs", "trace", self.trace, minimum=0)
+        sinks = self.sinks
+        if isinstance(sinks, str):     # CLI: obs.sinks=jsonl or jsonl,csv
+            sinks = tuple(s for s in sinks.split(",") if s)
+        if not isinstance(sinks, (tuple, list)):
+            raise SpecError(f"obs.sinks={self.sinks!r} must be a "
+                            f"tuple/list of {SINKS}")
+        object.__setattr__(self, "sinks", tuple(sinks))
+        for s in self.sinks:
+            _choice("obs", "sinks", s, SINKS)
+        needs_dir = [s for s in self.sinks if s in ("jsonl", "csv")]
+        if self.trace:
+            needs_dir.append("trace")
+        if needs_dir and not self.log_dir:
+            raise SpecError(
+                f"obs.log_dir is required by {sorted(set(needs_dir))}: "
+                f"file sinks and profiler traces need a directory to "
+                f"write into (obs.log_dir='runs/exp0').")
+
+
 # flat legacy-RunConfig field -> dotted spec path, used by override() and
 # the RunConfig shim so sweeps read the same in old and new code
 _ALIASES: Dict[str, str] = {
@@ -239,11 +294,13 @@ _ALIASES: Dict[str, str] = {
     "eval_every": "eval.every",
     "eval_episodes": "eval.episodes",
     "srank_every": "eval.srank_every",
+    "log_every": "obs.log_every",
+    "log_dir": "obs.log_dir",
 }
 
 _SECTIONS: Tuple[Tuple[str, type], ...] = (
     ("network", NetworkSpec), ("ofenet", OFENetSpec), ("replay", ReplaySpec),
-    ("execution", ExecutionSpec), ("eval", EvalSpec))
+    ("execution", ExecutionSpec), ("eval", EvalSpec), ("obs", ObsSpec))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,6 +314,7 @@ class ExperimentSpec:
     execution: ExecutionSpec = dataclasses.field(
         default_factory=ExecutionSpec)
     eval: EvalSpec = dataclasses.field(default_factory=EvalSpec)
+    obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
 
     # ------------------------------------------------------- validation
     def __post_init__(self):
@@ -367,50 +425,6 @@ class ExperimentSpec:
         # only warnings that can fire here are genuine combo warnings
         return ExperimentSpec.from_dict(d)
 
-    # ------------------------------------------------- RunConfig bridge
-    @classmethod
-    def from_run_config(cls, cfg: RunConfig) -> "ExperimentSpec":
-        """Translate the flat legacy config (validates combos on the way)."""
-        return cls(
-            env=cfg.env, algo=cfg.algo,
-            network=NetworkSpec(
-                num_units=cfg.num_units, num_layers=cfg.num_layers,
-                connectivity=cfg.connectivity, activation=cfg.activation,
-                block_backend=cfg.block_backend),
-            ofenet=OFENetSpec(
-                enabled=cfg.use_ofenet, num_units=cfg.ofenet_units,
-                num_layers=cfg.ofenet_layers),
-            replay=ReplaySpec(
-                backend=cfg.replay_backend, kernel=cfg.replay_kernel,
-                capacity=cfg.replay_capacity, prioritized=cfg.prioritized,
-                n_step=cfg.n_step),
-            execution=ExecutionSpec(
-                loop=cfg.loop, mesh_shards=cfg.mesh_shards,
-                batch_size=cfg.batch_size, total_steps=cfg.total_steps,
-                warmup_steps=cfg.warmup_steps, distributed=cfg.distributed,
-                n_core=cfg.n_core, n_env=cfg.n_env, seed=cfg.seed),
-            eval=EvalSpec(every=cfg.eval_every, episodes=cfg.eval_episodes,
-                          srank_every=cfg.srank_every))
-
-    def to_run_config(self, **extra) -> RunConfig:
-        """The flat view the Trainer engine consumes (OFENet connectivity/
-        activation/batch_norm travel separately via ``ofenet_config``)."""
-        n, o, r, x, e = (self.network, self.ofenet, self.replay,
-                         self.execution, self.eval)
-        return RunConfig(
-            env=self.env, algo=self.algo, num_units=n.num_units,
-            num_layers=n.num_layers, connectivity=n.connectivity,
-            activation=n.activation, block_backend=n.block_backend,
-            use_ofenet=o.enabled, ofenet_units=o.num_units,
-            ofenet_layers=o.num_layers, distributed=x.distributed,
-            n_core=x.n_core, n_env=x.n_env, prioritized=r.prioritized,
-            replay_backend=r.backend, replay_kernel=r.kernel, loop=x.loop,
-            n_step=r.n_step, mesh_shards=x.mesh_shards,
-            batch_size=x.batch_size, total_steps=x.total_steps,
-            warmup_steps=x.warmup_steps, replay_capacity=r.capacity,
-            eval_every=e.every, eval_episodes=e.episodes, seed=x.seed,
-            srank_every=e.srank_every, **extra)
-
     def ofenet_config(self, obs_dim: int, act_dim: int) -> OFENetConfig:
         o = self.ofenet
         return OFENetConfig(
@@ -491,8 +505,8 @@ class Experiment:
 
     def __init__(self, spec: ExperimentSpec, *, mesh=None):
         self.spec = spec
-        self._cfg = spec.to_run_config()
         self.trainer = Trainer(spec, mesh=mesh)
+        self._obs = ObsRun(spec.obs)
         self._ls: Optional[TrainLoopState] = None
         self.step = 0
         self.returns: List[float] = []
@@ -552,6 +566,9 @@ class Experiment:
             rng = np.random.default_rng()
             rng.bit_generator.state = b["rng_state"]
             exp.trainer.rng = rng
+        exp._obs.load_state(st.get("obs"))
+        exp._obs.log_event("restore", step=exp.step, path=str(path))
+        exp._obs.drain()
         return exp
 
     # ------------------------------------------------------------ running
@@ -572,16 +589,22 @@ class Experiment:
         PRNG split, so only bitwise-reproducible by runs stopping at the
         same step). ``keep_last`` retains the final sampled batch +
         priorities (loss-landscape tooling). Returns the cumulative
-        ``RunResult`` snapshot."""
+        ``RunResult`` snapshot.
+
+        With ``spec.obs.enabled`` the call also streams diagnostics: the
+        scan driver flushes each chunk's stacked scalar stream + a per-chunk
+        timing event, the python driver logs per step; both land in the
+        sinks via the async writer, which is drained before returning."""
         t0 = time.time()
-        cfg = self._cfg
+        x, ev, obs = self.spec.execution, self.spec.eval, self._obs
+        eval_every, srank_every = ev.every, ev.srank_every
         if steps is None:
-            steps = cfg.total_steps
+            steps = x.total_steps
         self._ensure_init()
         trainer, ls = self.trainer, self._ls
         start, end = self.step, self.step + steps
 
-        if cfg.loop == "scan":
+        if x.loop == "scan":
             # chunks stop at every eval point AND (when instrumented) every
             # srank point, so the scan driver records the exact same
             # returns/sranks steps as the per-step python loop. Chunking is
@@ -590,21 +613,28 @@ class Experiment:
             # identical (Trainer.chunk_fn).
             step = start
             while step < end:
-                stops = [(step // cfg.eval_every + 1) * cfg.eval_every, end]
-                if cfg.srank_every:
-                    stops.append((step // cfg.srank_every + 1)
-                                 * cfg.srank_every)
+                stops = [(step // eval_every + 1) * eval_every, end]
+                if srank_every:
+                    stops.append((step // srank_every + 1) * srank_every)
                 stop = min(stops)
-                do_eval = (stop % cfg.eval_every == 0
+                do_eval = (stop % eval_every == 0
                            or (eval_at_end and stop == end))
-                do_srank = (bool(cfg.srank_every)
-                            and stop % cfg.srank_every == 0)
+                do_srank = bool(srank_every) and stop % srank_every == 0
                 want_last = keep_last and stop == end
-                ls, out = trainer.chunk_fn(stop - step, do_eval,
-                                           do_srank)(ls)
+                obs.trace.begin()
+                tc = time.time()
+                with annotate("repro.chunk_dispatch"):
+                    ls, out = trainer.chunk_fn(stop - step, do_eval,
+                                               do_srank)(ls)
+                if "stream" in out:
+                    obs.flush_chunk(step, jax.device_get(out["stream"]))
+                    obs.chunk_event(step, stop, time.time() - tc)
+                obs.trace.end()
                 step = stop
                 if do_srank:
-                    self.sranks.append(int(out["srank"]))
+                    srank = int(out["srank"])
+                    self.sranks.append(srank)
+                    obs.log_event("srank", step=step, srank=srank)
                 if want_last:
                     self._last_batch, self._last_priorities = out["last"]
                 if do_eval:
@@ -616,10 +646,15 @@ class Experiment:
             metrics = batch = None
             for step in range(start + 1, end + 1):
                 ls, metrics, batch = trainer.py_step(ls)
-                if cfg.srank_every and step % cfg.srank_every == 0:
-                    self.sranks.append(
-                        int(effective_rank(metrics["q_features"])))
-                if (step % cfg.eval_every == 0
+                if obs.enabled and step % obs.log_every == 0:
+                    obs.log_train(step, {k: float(np.asarray(v))
+                                         for k, v in metrics.items()
+                                         if np.asarray(v).ndim == 0})
+                if srank_every and step % srank_every == 0:
+                    srank = int(effective_rank(metrics["q_features"]))
+                    self.sranks.append(srank)
+                    obs.log_event("srank", step=step, srank=srank)
+                if (step % eval_every == 0
                         or (eval_at_end and step == end)):
                     key, ke = jax.random.split(ls.key)
                     ls = ls._replace(key=key)
@@ -635,7 +670,18 @@ class Experiment:
                 self._last_priorities = metrics["priorities"]
 
         self._ls, self.step = ls, end
-        self._wall += time.time() - t0
+        wall = time.time() - t0
+        self._wall += wall
+        if obs.enabled:
+            obs.log_event(
+                "run", step=end, steps=steps, wall_s=wall,
+                steps_per_sec=steps / wall if wall > 0 else 0.0,
+                host_dispatches=trainer.dispatches,
+                chunk_compiles=len(trainer._chunks))
+            if obs.trace.n_chunks:
+                obs.log_event("trace", step=end, status=obs.trace.status,
+                              dir=obs.trace.trace_dir)
+            obs.drain()
         return self.result(include_state=keep_last)
 
     def _record_eval(self, step, ret, scalars, progress):
@@ -643,6 +689,7 @@ class Experiment:
         self.eval_steps.append(step)
         self._last_metrics = scalars
         self._rows.append({"step": step, "return": ret, **scalars})
+        self._obs.log_eval(step, ret, scalars)
         if progress:
             progress(step, ret, scalars)
 
@@ -651,6 +698,16 @@ class Experiment:
         """Stream the RunResult-style eval rows recorded so far (one dict
         per eval point: step, return, and the scalar training metrics)."""
         return iter([dict(r) for r in self._rows])
+
+    @property
+    def obs(self) -> ObsRun:
+        """The observability engine: sinks (``obs.rows`` for the memory
+        sink), stream counters, and the profiler-trace status."""
+        return self._obs
+
+    def close(self) -> None:
+        """Stop a still-active profiler capture and close the obs sinks."""
+        self._obs.close()
 
     def result(self, *, include_state: bool = False) -> RunResult:
         """The cumulative RunResult snapshot (shape-compatible with the
@@ -682,9 +739,12 @@ class Experiment:
         # (its outputs were never fetched), with the host replay's ordered
         # io_callbacks still mutating the buffer/RNG on the runtime thread —
         # snapshotting now would tear the checkpoint (buffer arrays final,
-        # RNG mid-chunk). Drain the program AND its effects first.
+        # RNG mid-chunk). Drain the program AND its effects first; the obs
+        # writer queue drains at the same barrier so the metric files are
+        # consistent with the snapshot.
         jax.block_until_ready(self._ls)
         jax.effects_barrier()
+        self._obs.drain()
         tree: Dict[str, Any] = {"loop": _unkey(self._ls)}
         state: Dict[str, Any] = {
             "step": self.step, "returns": self.returns,
@@ -693,6 +753,7 @@ class Experiment:
             "wall_time_s": self._wall,
             "n_params": int(self.trainer.n_params),
             "dispatches": int(self.trainer.dispatches),
+            "obs": self._obs.state(),
         }
         buf = self.trainer.buffer
         if buf is not None:
@@ -703,6 +764,9 @@ class Experiment:
                 "max_priority": inner.max_priority,
                 "rng_state": self.trainer.rng.bit_generator.state,
             }
-        ckpt.save(path, tree,
-                  metadata={"spec": self.spec.to_dict(),
-                            "experiment": state})
+        with annotate("repro.ckpt_save"):
+            ckpt.save(path, tree,
+                      metadata={"spec": self.spec.to_dict(),
+                                "experiment": state})
+        self._obs.log_event("save", step=self.step, path=str(path))
+        self._obs.drain()

@@ -13,6 +13,10 @@ them to the paper budget for real hardware, and every preset must build an
     exp = Experiment.from_spec(presets.get("fig3-width").override(
         num_units=1024))
 
+Presets ship with telemetry off; attach it per run with dotted overrides
+(``.override(**{"obs.enabled": True, "obs.sinks": ("jsonl",),
+"obs.log_dir": "runs/exp0"})`` — see ``repro.obs``).
+
 Names follow the paper artifacts: ``fig1-depth``, ``fig3-width``,
 ``fig4-grid``, ``fig5-connectivity``, ``fig6-ofenet``, ``fig8-distributed``,
 ``fig10-ablation``, ``fig13-activation``, ``table1-ours``, ``table1-orig``,

@@ -2,26 +2,34 @@
 
 The typed entry point is ``repro.rl.experiment`` (``ExperimentSpec`` +
 resumable ``Experiment`` handle); this module keeps the ``Trainer`` engine
-they drive plus the legacy flat surface. ``run_training``/``RunConfig``
-remain as thin deprecation shims that translate to a spec and delegate,
-seed-for-seed. Every paper ablation is reachable through ``RunConfig``
-flags (mapped 1:1 onto spec fields):
+they drive. ``Trainer`` consumes the spec tree natively (the flat
+``RunConfig``/``run_training`` surface is GONE — the former deprecation
+shims now raise with a porting hint). Every paper ablation is a spec field:
 
-* ``connectivity``           — mlp | resnet | densenet | d2rl   (Fig. 5)
-* ``num_units / num_layers`` — width/depth study                (Figs. 1/3/4)
-* ``use_ofenet``             — decoupled representation          (Figs. 6/7)
-* ``distributed``            — Ape-X actor pool vs 1-step loop   (Figs. 8/12)
+* ``network.connectivity``   — mlp | resnet | densenet | d2rl   (Fig. 5)
+* ``network.num_units/_layers`` — width/depth study             (Figs. 1/3/4)
+* ``ofenet.enabled``         — decoupled representation          (Figs. 6/7)
+* ``execution.distributed``  — Ape-X actor pool vs 1-step loop   (Figs. 8/12)
 * ``algo``                   — sac | td3                         (Fig. 9)
-* ``prioritized``            — PER vs uniform replay
-* ``block_backend``          — "jnp" | "fused": route every MLP block
+* ``replay.prioritized``     — PER vs uniform replay
+* ``network.block_backend``  — "jnp" | "fused": route every MLP block
   (actor, twin critics, OFENet online/target) through the fused streaming
   DenseNet-stack kernel (``kernels/dense_block/stack.py``, custom VJP) so
   the scanned superstep trains through it; "jnp" is the concat loop
-* ``replay_backend``         — host (NumPy sum-tree) | device (repro.replay)
-  with ``replay_kernel`` picking the device sum-tree impl ("xla" | "pallas")
-* ``n_step``                 — Ape-X n-step returns (1 | 3), computed on
+* ``replay.backend``         — host (NumPy sum-tree) | device (repro.replay)
+  with ``replay.kernel`` picking the device sum-tree impl ("xla" | "pallas")
+* ``replay.n_step``          — Ape-X n-step returns (1 | 3), computed on
   device in the replay add path (repro.replay.store.nstep_push)
-* ``loop``                   — "python" | "scan":
+* ``obs``                    — in-loop telemetry (``repro.obs``): when
+  ``obs.enabled``, the scan body additionally emits every scalar training
+  metric per step as stacked scan outputs (``chunk_fn``'s
+  ``out["stream"]``), flushed/downsampled on the host in the chunk
+  epilogue — the body stays uniform across chunk lengths and obs knobs, so
+  the bitwise-resume contract is preserved with obs on or off, and
+  enabling obs does not change training outputs bitwise (tests/test_obs).
+  ``obs.grad_norms`` threads ``grad_norms=True`` into the algorithm
+  configs (sac/td3 grad-norm + update-ratio taps).
+* ``execution.loop``         — "python" | "scan":
 
   The training loop is built around a functional ``TrainLoopState`` and a
   pure superstep that fuses collect -> n-step -> add -> sample -> update ->
@@ -33,8 +41,7 @@ flags (mapped 1:1 onto spec fields):
   ``total_steps / eval_every + O(1)`` host dispatches total (plus
   ``total_steps / srank_every`` when srank instrumentation is on: chunks
   also stop at srank points so both drivers record identical steps; counted
-  in
-  ``RunResult.metrics["host_dispatches"]``; throughput:
+  in ``RunResult.metrics["host_dispatches"]``; throughput:
   benchmarks/loop_fusion.py). A chunk is ONE scan over ALL its supersteps
   with the last step's metrics/batch carried through the scan carry — the
   superstep only ever compiles as the scan body, so any re-chunking of the
@@ -43,12 +50,12 @@ flags (mapped 1:1 onto spec fields):
   superstep through ordered ``io_callback``s, so both backends are
   seed-for-seed identical across ``loop=`` choices.
 
-* ``mesh_shards``            — >0 routes the superstep through the
+* ``execution.mesh_shards``  — >0 routes the superstep through the
   mesh-sharded Ape-X wiring (``replay.collect_and_add_sharded`` +
   ``sharded_replay_sample``): actors and replay shards live on the mesh
   ``data`` axis (``launch.mesh.make_actor_mesh``), transitions never leave
   their shard, and the learner consumes one coherent cross-shard batch.
-  Requires ``replay_backend="device"``.
+  Requires ``replay.backend="device"``.
 
 ``RunResult.metrics`` also surfaces the priority-staleness distribution of
 the last sampled batch (``staleness_mean/p50/max`` = learner step - add
@@ -68,6 +75,7 @@ from jax.experimental import io_callback
 
 from repro.common import tree_size
 from repro.core.effective_rank import effective_rank
+from repro.obs.trace import annotate
 from repro.core.ofenet import OFENetConfig
 from repro.launch.mesh import make_actor_mesh, replay_shards
 from repro.replay import (DeviceReplayConfig, nstep_emit_flat, nstep_init,
@@ -80,53 +88,42 @@ from repro.rl.envs import EnvSpec, eval_returns, make_env
 _TRANSITION_FIELDS = ("obs", "act", "rew", "next_obs", "done")
 
 
-@dataclasses.dataclass(frozen=True)
+_REMOVED = (
+    "{name} was removed: the RunConfig deprecation period ended (it warned "
+    "since the ExperimentSpec API landed). Build a spec instead — the flat "
+    "field names still work as override aliases:\n"
+    "    from repro.rl import Experiment, ExperimentSpec\n"
+    "    spec = ExperimentSpec().override(num_units=256, "
+    "replay_backend='device', loop='scan')\n"
+    "    res = Experiment.from_spec(spec).run(spec.execution.total_steps)\n"
+    "or start from a repro.rl.presets entry.")
+
+
 class RunConfig:
-    env: str = "pendulum"
-    algo: str = "sac"
-    num_units: int = 256
-    num_layers: int = 2
-    connectivity: str = "densenet"
-    activation: str = "swish"
-    block_backend: str = "jnp"       # jnp | fused (stack kernel, blocks.py)
-    use_ofenet: bool = True
-    ofenet_units: int = 64
-    ofenet_layers: int = 4
-    distributed: bool = True
-    n_core: int = 2
-    n_env: int = 32
-    prioritized: bool = True
-    replay_backend: str = "host"     # host | device
-    replay_kernel: str = "xla"       # device sum-tree impl: xla | pallas
-    loop: str = "python"             # python (per-step dispatch) | scan
-    n_step: int = 1                  # Ape-X n-step returns (paper default 3)
-    mesh_shards: int = 0             # >0: shard actors+replay on a data mesh
-    batch_size: int = 256
-    total_steps: int = 2000          # gradient steps (paper x-axis)
-    warmup_steps: int = 500
-    replay_capacity: int = 100_000
-    eval_every: int = 500
-    eval_episodes: int = 3
-    seed: int = 0
-    srank_every: int = 0             # 0 = off
-    keep_state: bool = False         # return final agent state (landscapes)
+    """REMOVED — the flat config's deprecation warning is now an error."""
+
+    def __init__(self, *_a, **_k):
+        raise RuntimeError(_REMOVED.format(name="RunConfig"))
 
 
-def _build(cfg: RunConfig, env: EnvSpec, ofe_cfg: Optional[OFENetConfig] = None):
-    """Algorithm pieces for ``cfg``. ``ofe_cfg`` overrides the RunConfig-era
-    OFENet derivation (the ExperimentSpec path, which carries its own
-    connectivity/activation/batch_norm knobs)."""
-    if ofe_cfg is None and cfg.use_ofenet:
-        ofe_cfg = OFENetConfig(state_dim=env.obs_dim, action_dim=env.act_dim,
-                               num_layers=cfg.ofenet_layers,
-                               num_units=cfg.ofenet_units,
-                               connectivity="densenet", batch_norm=False,
-                               block_backend=cfg.block_backend)
+def run_training(*_a, **_k):
+    """REMOVED — the one-shot shim's deprecation warning is now an error."""
+    raise RuntimeError(_REMOVED.format(name="run_training"))
+
+
+def _build(spec, env: EnvSpec):
+    """Algorithm pieces for a (duck-typed) ``ExperimentSpec``: the algo
+    config with OFENet/obs knobs threaded in, plus init/update/policy fns."""
+    ofe_cfg: Optional[OFENetConfig] = None
+    if spec.ofenet.enabled:
+        ofe_cfg = spec.ofenet_config(env.obs_dim, env.act_dim)
+    n = spec.network
     common = dict(obs_dim=env.obs_dim, act_dim=env.act_dim,
-                  num_units=cfg.num_units, num_layers=cfg.num_layers,
-                  connectivity=cfg.connectivity, activation=cfg.activation,
-                  block_backend=cfg.block_backend, ofenet=ofe_cfg)
-    if cfg.algo == "sac":
+                  num_units=n.num_units, num_layers=n.num_layers,
+                  connectivity=n.connectivity, activation=n.activation,
+                  block_backend=n.block_backend, ofenet=ofe_cfg,
+                  grad_norms=spec.obs.enabled and spec.obs.grad_norms)
+    if spec.algo == "sac":
         acfg = sac_mod.SACConfig(**common)
 
         def sample(params, s, key):
@@ -156,7 +153,7 @@ class RunResult:
     metrics: Dict[str, float]
     param_count: int
     wall_time_s: float
-    state: object = None             # only when cfg.keep_state
+    state: object = None             # only when run(keep_last=True)
     last_batch: object = None
     last_priorities: object = None   # final sampled-batch TD priorities
 
@@ -194,40 +191,45 @@ class Trainer:
     traced-call counter).
     """
 
-    def __init__(self, cfg, mesh=None):
-        # accepts a flat RunConfig or a typed ExperimentSpec (duck-typed via
-        # to_run_config so this module never imports repro.rl.experiment)
-        self.spec = None
-        if hasattr(cfg, "to_run_config"):
-            self.spec, cfg = cfg, cfg.to_run_config()
-        self.cfg = cfg
+    def __init__(self, spec, mesh=None):
+        # consumes a typed ExperimentSpec natively (duck-typed by field
+        # access, so this module never imports repro.rl.experiment); the
+        # flat RunConfig view is gone
+        self.spec = spec
+        x, r = spec.execution, spec.replay
+        # loop-hot scalars lifted off the spec tree once
+        self.n_step = r.n_step
+        self.batch_size = x.batch_size
+        self.seed = x.seed
+        self.warmup_steps = x.warmup_steps
+        self.eval_episodes = spec.eval.episodes
+        self.srank_every = spec.eval.srank_every
+        self.obs_stream = spec.obs.enabled
         self.dispatches = 0
         self._chunks: Dict[tuple, Callable] = {}
-        self.env = env = make_env(cfg.env)
-        ofe_cfg = None
-        if self.spec is not None and self.spec.ofenet.enabled:
-            ofe_cfg = self.spec.ofenet_config(env.obs_dim, env.act_dim)
+        self.env = env = make_env(spec.env)
         (self.acfg, self.init_fn, self.update_fn, sample_fn,
-         self.mean_fn) = _build(cfg, env, ofe_cfg=ofe_cfg)
-        self.n_actors = cfg.n_core * cfg.n_env if cfg.distributed else 1
+         self.mean_fn) = _build(spec, env)
+        self.n_actors = x.n_actors
         self.gamma = self.acfg.gamma
 
-        if mesh is None and cfg.mesh_shards > 0:
-            mesh = make_actor_mesh(cfg.mesh_shards)
+        if mesh is None and x.mesh_shards > 0:
+            mesh = make_actor_mesh(x.mesh_shards)
         self.mesh = mesh
-        self.use_device = cfg.replay_backend == "device"
+        self.use_device = r.backend == "device"
         if mesh is not None:
             if not self.use_device:
-                raise ValueError("mesh_shards requires replay_backend='device'")
+                raise ValueError("mesh_shards requires replay.backend="
+                                 "'device'")
             shards = replay_shards(mesh)
-            if (self.n_actors % shards or cfg.batch_size % shards
-                    or cfg.replay_capacity % shards):
+            if (self.n_actors % shards or x.batch_size % shards
+                    or r.capacity % shards):
                 raise ValueError(
                     f"mesh_shards={shards} must divide n_actors="
-                    f"{self.n_actors}, batch_size={cfg.batch_size} and "
-                    f"replay_capacity={cfg.replay_capacity}")
-        if not self.use_device and cfg.replay_backend != "host":
-            raise ValueError(cfg.replay_backend)
+                    f"{self.n_actors}, batch_size={x.batch_size} and "
+                    f"replay_capacity={r.capacity}")
+        if not self.use_device and r.backend != "host":
+            raise ValueError(r.backend)
 
         def train_policy(params, obs, k):
             return sample_fn(params, obs, k)
@@ -239,20 +241,20 @@ class Trainer:
         if self.use_device:
             shards = replay_shards(mesh) if mesh is not None else 1
             self.dcfg = DeviceReplayConfig(
-                capacity=cfg.replay_capacity // shards, obs_dim=env.obs_dim,
-                act_dim=env.act_dim, uniform=not cfg.prioritized,
-                backend=cfg.replay_kernel,
+                capacity=r.capacity // shards, obs_dim=env.obs_dim,
+                act_dim=env.act_dim, uniform=not r.prioritized,
+                backend=r.kernel,
                 interpret=jax.default_backend() == "cpu",
-                n_step=cfg.n_step)
+                n_step=r.n_step)
             self.buffer = None
         else:
-            buf_cls = (replay_mod.PrioritizedReplay if cfg.prioritized
+            buf_cls = (replay_mod.PrioritizedReplay if r.prioritized
                        else replay_mod.UniformReplay)
-            self.buffer = buf_cls(cfg.replay_capacity, env.obs_dim,
-                                  env.act_dim, n_step=cfg.n_step)
-            self.rng = np.random.default_rng(cfg.seed)
+            self.buffer = buf_cls(r.capacity, env.obs_dim,
+                                  env.act_dim, n_step=r.n_step)
+            self.rng = np.random.default_rng(x.seed)
             self._host_fields = list(_TRANSITION_FIELDS)
-            if cfg.n_step > 1:
+            if r.n_step > 1:
                 self._host_fields.append("disc")
 
         # ------------------------------------------- jitted python-loop ops
@@ -260,7 +262,7 @@ class Trainer:
         self._update_j = w(jax.jit(
             lambda st, b, k: self.update_fn(st, self.acfg, b, k)))
         self.eval_j = w(jax.jit(lambda params, k: eval_returns(
-            env, self.mean_fn, params, k, cfg.eval_episodes)))
+            env, self.mean_fn, params, k, self.eval_episodes)))
         if self.use_device:
             self._collect_add_j = w(jax.jit(partial(
                 self._op_collect_add, train_policy, steps=1, drop=0)))
@@ -313,12 +315,11 @@ class Trainer:
                       steps: int, drop: int):
         """collect ``steps`` env steps and roll them through the n-step ring
         (identity for n_step == 1); returns store-schema transition rows."""
-        cfg = self.cfg
         actors, trs = apex.collect(self.env, policy, params, actors, steps,
                                    key)
-        if cfg.n_step == 1:
+        if self.n_step == 1:
             return actors, nstate, {k: trs[k] for k in _TRANSITION_FIELDS}
-        nstate, flat = nstep_emit_flat(cfg.n_step, self.gamma, nstate, trs,
+        nstate, flat = nstep_emit_flat(self.n_step, self.gamma, nstate, trs,
                                        steps, drop)
         return actors, nstate, flat
 
@@ -326,7 +327,7 @@ class Trainer:
     def _op_collect_add(self, policy, params, actors, nstate, rstate, key,
                         step, *, steps: int, drop: int):
         if self.mesh is not None:
-            if self.cfg.n_step > 1:
+            if self.n_step > 1:
                 return replay_sharded.collect_and_add_sharded(
                     self.env, policy, self.mesh, self.dcfg, params, actors,
                     steps, key, rstate, nstep_state=nstate, gamma=self.gamma,
@@ -342,10 +343,10 @@ class Trainer:
     def _op_sample(self, rstate, key, step):
         if self.mesh is not None:
             batch, idx, weights = replay_sharded.sharded_replay_sample(
-                self.dcfg, self.mesh, rstate, key, self.cfg.batch_size)
+                self.dcfg, self.mesh, rstate, key, self.batch_size)
         else:
             batch, idx, weights = replay_sample(self.dcfg, rstate, key,
-                                                self.cfg.batch_size)
+                                                self.batch_size)
         staleness = (step - batch.pop("add_step")).astype(jnp.float32)
         batch["weight"] = weights
         return batch, idx, staleness
@@ -358,24 +359,27 @@ class Trainer:
 
     # --------------------------------------------- host backend callbacks
     def _cb_add(self, *arrs):
-        self.buffer.add_batch(dict(zip(self._host_fields,
-                                       [np.asarray(a) for a in arrs])))
+        with annotate("repro.replay.host_add"):
+            self.buffer.add_batch(dict(zip(self._host_fields,
+                                           [np.asarray(a) for a in arrs])))
         return np.int32(0)
 
     def _cb_sample(self):
-        batch, idx, weights = self.buffer.sample(self.cfg.batch_size,
-                                                 self.rng)
+        with annotate("repro.replay.host_sample"):
+            batch, idx, weights = self.buffer.sample(self.batch_size,
+                                                     self.rng)
         return (tuple(batch[f].astype(np.float32)
                       for f in self._host_fields)
                 + (idx.astype(np.int32), weights.astype(np.float32)))
 
     def _cb_update(self, idx, priorities):
-        self.buffer.update_priorities(np.asarray(idx),
-                                      np.asarray(priorities))
+        with annotate("repro.replay.host_update_prio"):
+            self.buffer.update_priorities(np.asarray(idx),
+                                          np.asarray(priorities))
         return np.int32(0)
 
     def _host_sample_shapes(self):
-        env, bs = self.env, self.cfg.batch_size
+        env, bs = self.env, self.batch_size
         dims = {"obs": (bs, env.obs_dim), "act": (bs, env.act_dim),
                 "rew": (bs,), "next_obs": (bs, env.obs_dim), "done": (bs,),
                 "disc": (bs,)}
@@ -450,7 +454,7 @@ class Trainer:
         actors, nstate, flat = self._collect_emit_j(ls.agent["params"],
                                                     ls.actors, ls.nstep, kc)
         self.buffer.add_batch({k: np.asarray(v) for k, v in flat.items()})
-        batch_np, idx, weights = self.buffer.sample(self.cfg.batch_size,
+        batch_np, idx, weights = self.buffer.sample(self.batch_size,
                                                     self.rng)
         batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
         batch["weight"] = jnp.asarray(weights)
@@ -476,8 +480,17 @@ class Trainer:
         ``do_srank`` only select what the chunk returns. ``want_last`` is
         gone from the signature entirely (the last batch/priorities are
         always available from the carry), shrinking the compile-cache key
-        space to (n_steps, do_eval, do_srank)."""
-        do_srank = do_srank and bool(self.cfg.srank_every)
+        space to (n_steps, do_eval, do_srank).
+
+        With ``obs.enabled`` the scan body additionally stacks every scalar
+        metric as a scan output — ``out["stream"]``, one ``(n_steps,)``
+        array per scalar. The stream is emitted in FULL on every step and
+        downsampled on the host (``repro.obs.stream.ObsRun.flush_chunk``),
+        so the body's codegen stays uniform across obs knobs and chunk
+        lengths: the scalars were already live in the carry, and stacking
+        extra outputs cannot change the training computation — obs on/off
+        is bitwise-identical (tests/test_obs.py)."""
+        do_srank = do_srank and bool(self.srank_every)
         sig = (n_steps, do_eval, do_srank)
         if sig in self._chunks:
             return self._chunks[sig]
@@ -486,24 +499,34 @@ class Trainer:
             _, m_t, b_t = jax.eval_shape(self._superstep, ls)
             zeros = partial(jax.tree_util.tree_map,
                             lambda s: jnp.zeros(s.shape, s.dtype))
+            stream_keys = tuple(sorted(
+                k for k, v in m_t.items() if v.ndim == 0)) \
+                if self.obs_stream else ()
 
             def body(carry, _):
                 c, _m, _b = carry
-                return self._superstep(c), None
+                nxt = self._superstep(c)
+                ys = ({k: nxt[1][k] for k in stream_keys}
+                      if stream_keys else None)
+                return nxt, ys
 
-            (ls, metrics, batch), _ = jax.lax.scan(
+            (ls, metrics, batch), ys = jax.lax.scan(
                 body, (ls, zeros(m_t), zeros(b_t)), None, length=n_steps)
             out = {"scal": {k: v for k, v in metrics.items()
                             if getattr(v, "ndim", None) == 0},
                    "last": (batch, metrics["priorities"])}
+            if stream_keys:
+                out["stream"] = ys
             if do_srank:
-                out["srank"] = effective_rank(metrics["q_features"])
+                with jax.named_scope("repro.srank"):
+                    out["srank"] = effective_rank(metrics["q_features"])
             if do_eval:
                 key, ke = jax.random.split(ls.key)
                 ls = ls._replace(key=key)
-                out["eval"] = eval_returns(self.env, self.mean_fn,
-                                           ls.agent["params"], ke,
-                                           self.cfg.eval_episodes)
+                with jax.named_scope("repro.eval"):
+                    out["eval"] = eval_returns(self.env, self.mean_fn,
+                                               ls.agent["params"], ke,
+                                               self.eval_episodes)
             return self._pin(ls), out
 
         self._chunks[sig] = self._count(jax.jit(chunk))
@@ -514,16 +537,16 @@ class Trainer:
         """Agent/actor/replay init (shapes + seed-derived values), WITHOUT
         the warmup collect. Returns the pre-warmup TrainLoopState and the
         warmup key (same PRNG schedule as the original monolithic init)."""
-        cfg, env = self.cfg, self.env
-        key = jax.random.key(cfg.seed)
+        env = self.env
+        key = jax.random.key(self.seed)
         key, k_init, k_actor = jax.random.split(key, 3)
         agent = self.init_fn(k_init, self.acfg)
         self.n_params = tree_size(agent["params"])
         actors = apex.init_actor_states(env, k_actor, self.n_actors)
 
         nstate = None
-        if cfg.n_step > 1 and self.mesh is None:
-            nstate = nstep_init(cfg.n_step, self.n_actors, env.obs_dim,
+        if self.n_step > 1 and self.mesh is None:
+            nstate = nstep_init(self.n_step, self.n_actors, env.obs_dim,
                                 env.act_dim)
         key, kw = jax.random.split(key)
         step0 = jnp.zeros((), jnp.int32)
@@ -536,9 +559,9 @@ class Trainer:
                                                               P("data")))
                 rstate = replay_sharded.sharded_replay_init(self.dcfg,
                                                             self.mesh)
-                if cfg.n_step > 1:
+                if self.n_step > 1:
                     nstate = replay_sharded.sharded_nstep_init(
-                        self.mesh, cfg.n_step, self.n_actors // shards,
+                        self.mesh, self.n_step, self.n_actors // shards,
                         env.obs_dim, env.act_dim)
             else:
                 rstate = replay_init(self.dcfg)
@@ -555,10 +578,9 @@ class Trainer:
 
     def init(self) -> TrainLoopState:
         """Agent/actor/replay init + random-policy warmup (paper A.4)."""
-        cfg = self.cfg
         ls, kw = self._fresh_state()
-        warm = max(cfg.warmup_steps // self.n_actors, 1, cfg.n_step)
-        drop = cfg.n_step - 1
+        warm = max(self.warmup_steps // self.n_actors, 1, self.n_step)
+        drop = self.n_step - 1
         if self.use_device:
             warm_j = self._count(jax.jit(partial(
                 self._op_collect_add, self._rand_policy, steps=warm,
@@ -576,30 +598,3 @@ class Trainer:
                                    for k, v in flat.items()})
             ls = ls._replace(actors=actors, nstep=nstate)
         return self._pin(ls, put=True)
-
-
-def run_training(cfg: RunConfig, progress: Optional[Callable] = None,
-                 mesh=None) -> RunResult:
-    """DEPRECATED shim: translate the flat ``RunConfig`` into a typed
-    ``ExperimentSpec`` and delegate to ``repro.rl.experiment.Experiment``.
-
-    Seed-for-seed identical to the pre-spec runner (the Experiment drives the
-    same Trainer/superstep/PRNG schedule). Invalid flag combinations that the
-    flat config used to ignore quietly now fail/warn at spec construction:
-    ``replay_backend="host"`` + ``replay_kernel="pallas"`` raises SpecError,
-    ``mesh_shards>0`` + ``loop="python"`` emits a SpecWarning. New code
-    should build an ``ExperimentSpec`` (or a ``repro.rl.presets`` entry) and
-    use the resumable ``Experiment`` handle directly.
-    """
-    import warnings
-
-    from repro.rl.experiment import Experiment, ExperimentSpec
-    warnings.warn(
-        "run_training(RunConfig(...)) is a deprecation shim; build an "
-        "ExperimentSpec (repro.rl.experiment) or a repro.rl.presets entry "
-        "and drive the resumable Experiment handle instead",
-        DeprecationWarning, stacklevel=2)
-    spec = ExperimentSpec.from_run_config(cfg)
-    exp = Experiment.from_spec(spec, mesh=mesh)
-    return exp.run(cfg.total_steps, progress=progress, eval_at_end=True,
-                   keep_last=cfg.keep_state)

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import (Params, PRNGKey, dense_apply, ema_update, huber,
-                          split_keys, tree_size)
+                          split_keys, tree_l2_norm, tree_size,
+                          tree_update_ratio)
 from repro.core.blocks import MLPBlockConfig, mlp_block_apply, mlp_block_init
 from repro.core.ofenet import OFENetConfig
 from repro.core import ofenet as ofe
@@ -38,6 +39,7 @@ class SACConfig:
     init_alpha: float = 0.1
     huber: bool = True                 # paper A.1
     block_backend: str = "jnp"         # jnp | fused stack kernel (blocks.py)
+    grad_norms: bool = False           # obs taps: grad/update norms per net
     ofenet: Optional[OFENetConfig] = None
 
     @property
@@ -170,6 +172,10 @@ def sac_update(state: Params, cfg: SACConfig, batch: Dict[str, jax.Array],
         new_params["ofenet"] = ofep
         new_opt["ofenet"] = opt_ofe
         metrics["aux_loss"] = l_aux
+        if cfg.grad_norms:   # obs taps: pure consumers of existing values
+            metrics["grad_norm_ofenet"] = tree_l2_norm(g)
+            metrics["update_ratio_ofenet"] = tree_update_ratio(
+                upd, params["ofenet"]["online"])
     work = new_params   # features below use the refreshed OFENet
 
     # --- critic update -----------------------------------------------------
@@ -199,6 +205,10 @@ def sac_update(state: Params, cfg: SACConfig, batch: Dict[str, jax.Array],
                                   params["critics"])
     new_params["critics"] = critics
     new_opt["critics"] = opt_c
+    if cfg.grad_norms:
+        metrics["grad_norm_critics"] = tree_l2_norm(g_q)
+        metrics["update_ratio_critics"] = tree_update_ratio(
+            critics, params["critics"])
 
     # --- actor update ------------------------------------------------------
     def actor_loss(actor):
@@ -212,6 +222,10 @@ def sac_update(state: Params, cfg: SACConfig, batch: Dict[str, jax.Array],
     actor, opt_a = adamw_update(opt_cfg, g_pi, opt["actor"], params["actor"])
     new_params["actor"] = actor
     new_opt["actor"] = opt_a
+    if cfg.grad_norms:
+        metrics["grad_norm_actor"] = tree_l2_norm(g_pi)
+        metrics["update_ratio_actor"] = tree_update_ratio(actor,
+                                                          params["actor"])
 
     # --- temperature -------------------------------------------------------
     def alpha_loss(log_alpha):

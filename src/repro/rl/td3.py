@@ -12,7 +12,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.common import Params, PRNGKey, ema_update, huber, split_keys
+from repro.common import (Params, PRNGKey, ema_update, huber, split_keys,
+                          tree_l2_norm, tree_update_ratio)
 from repro.core.blocks import MLPBlockConfig, mlp_block_apply, mlp_block_init
 from repro.core.ofenet import OFENetConfig
 from repro.core import ofenet as ofe
@@ -36,6 +37,7 @@ class TD3Config:
     expl_noise: float = 0.1
     huber: bool = True
     block_backend: str = "jnp"         # jnp | fused stack kernel (blocks.py)
+    grad_norms: bool = False           # obs taps: grad/update norms per net
     ofenet: Optional[OFENetConfig] = None
 
     @property
@@ -132,6 +134,10 @@ def td3_update(state: Params, cfg: TD3Config, batch: Dict[str, jax.Array],
         new_params["ofenet"] = ofep
         new_opt["ofenet"] = opt_ofe
         metrics["aux_loss"] = l_aux
+        if cfg.grad_norms:   # obs taps: pure consumers of existing values
+            metrics["grad_norm_ofenet"] = tree_l2_norm(g)
+            metrics["update_ratio_ofenet"] = tree_update_ratio(
+                upd, params["ofenet"]["online"])
     work = new_params
 
     # --- critic -------------------------------------------------------------
@@ -160,6 +166,10 @@ def td3_update(state: Params, cfg: TD3Config, batch: Dict[str, jax.Array],
                                   params["critics"])
     new_params["critics"] = critics
     new_opt["critics"] = opt_c
+    if cfg.grad_norms:
+        metrics["grad_norm_critics"] = tree_l2_norm(g_q)
+        metrics["update_ratio_critics"] = tree_update_ratio(
+            critics, params["critics"])
 
     # --- delayed actor + targets -------------------------------------------
     def actor_loss(actor):
@@ -178,6 +188,11 @@ def td3_update(state: Params, cfg: TD3Config, batch: Dict[str, jax.Array],
         lambda a, b: jnp.where(do_policy, a, b), new, old)
     actor = pick(actor_new, params["actor"])
     new_params["actor"] = actor
+    if cfg.grad_norms:
+        # ratio measured on the PICKED params: 0 on delayed (skipped) steps
+        metrics["grad_norm_actor"] = tree_l2_norm(g_pi)
+        metrics["update_ratio_actor"] = tree_update_ratio(actor,
+                                                          params["actor"])
     new_opt["actor"] = pick(opt_a_new, opt["actor"])
     new_params["target_actor"] = ema_update(params["target_actor"], actor,
                                             jnp.where(do_policy, cfg.tau, 0.0))

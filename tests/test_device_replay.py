@@ -198,25 +198,31 @@ def test_functional_loop_is_jittable_end_to_end():
 
 @pytest.mark.parametrize("algo", ["sac", "td3"])
 def test_runner_device_backend_trains(algo):
-    from repro.rl import RunConfig, run_training
-    cfg = RunConfig(env="pendulum", algo=algo, num_units=16, num_layers=1,
-                    use_ofenet=False, distributed=True, n_core=1, n_env=4,
-                    total_steps=10, warmup_steps=8, eval_every=10,
-                    eval_episodes=1, replay_capacity=512, batch_size=16,
-                    replay_backend="device")
-    res = run_training(cfg)
+    from repro.rl import Experiment, ExperimentSpec
+    spec = ExperimentSpec().override(
+        env="pendulum", algo=algo, num_units=16, num_layers=1,
+        use_ofenet=False, distributed=True, n_core=1, n_env=4,
+        total_steps=10, warmup_steps=8, eval_every=10,
+        eval_episodes=1, replay_capacity=512, batch_size=16,
+        replay_backend="device")
+    res = Experiment.from_spec(spec).run(eval_at_end=True)
     assert len(res.returns) == 1 and np.isfinite(res.returns[0])
 
 
 def test_runner_device_pallas_matches_xla():
     """The kernel choice must not change the training trajectory."""
-    from repro.rl import RunConfig, run_training
+    from repro.rl import Experiment, ExperimentSpec
     base = dict(env="pendulum", num_units=16, num_layers=1, use_ofenet=False,
                 distributed=True, n_core=1, n_env=4, total_steps=8,
                 warmup_steps=8, eval_every=8, eval_episodes=1,
                 replay_capacity=256, batch_size=16, replay_backend="device")
-    r_xla = run_training(RunConfig(**base, replay_kernel="xla"))
-    r_pal = run_training(RunConfig(**base, replay_kernel="pallas"))
+
+    def run(**kw):
+        spec = ExperimentSpec().override(**base, **kw)
+        return Experiment.from_spec(spec).run(eval_at_end=True)
+
+    r_xla = run(replay_kernel="xla")
+    r_pal = run(replay_kernel="pallas")
     np.testing.assert_allclose(r_xla.returns, r_pal.returns, rtol=1e-4)
 
 

@@ -1,5 +1,5 @@
 """Layered experiment API tests: spec-tree validation (invalid combos fail
-at construction, with the legacy RunConfig shim enforcing the same rules),
+at construction; the removed RunConfig surface raises with a porting hint),
 to_dict/from_dict serialization incl. unknown-key forward compat, override
 semantics, checkpoint-metadata round-trip through checkpoint/ckpt.py, the
 preset registry building every paper scenario without jit, and save/restore
@@ -17,6 +17,7 @@ import pytest
 from repro.checkpoint import ckpt
 from repro.rl import (Experiment, ExperimentSpec, RunConfig, SpecError,
                       SpecWarning, parse_overrides, presets, run_training)
+from repro.rl.runner import Trainer
 
 _SMALL = dict(num_units=16, num_layers=1, use_ofenet=False,
               distributed=True, n_core=1, n_env=4, total_steps=12,
@@ -67,18 +68,16 @@ def test_fused_blocks_reject_ofenet_batch_norm():
     _small(use_ofenet=True, block_backend="fused")
 
 
-def test_runconfig_shim_enforces_spec_rules():
-    """The deprecation shim validates RunConfig-era combos the flat surface
-    used to drop silently."""
-    bad = RunConfig(replay_backend="host", replay_kernel="pallas",
-                    total_steps=1)
-    with pytest.raises(SpecError, match="pallas"):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            run_training(bad)
-    with pytest.warns(DeprecationWarning, match="ExperimentSpec"):
-        with pytest.raises(SpecError):
-            run_training(bad)
+def test_runconfig_surface_removed():
+    """The deprecation period ended: both legacy names raise with a porting
+    recipe pointing at the spec aliases, and the Trainer consumes specs
+    natively (no flat view in between)."""
+    with pytest.raises(RuntimeError, match="override"):
+        RunConfig(replay_backend="host", total_steps=1)
+    with pytest.raises(RuntimeError, match="ExperimentSpec"):
+        run_training(None)
+    assert not hasattr(ExperimentSpec(), "to_run_config")
+    assert Trainer(presets.get("smoke")).spec is presets.get("smoke")
 
 
 # ------------------------------------------------------------- serialization
@@ -337,19 +336,17 @@ def test_restore_without_metadata_fails_loudly(tmp_path):
         Experiment.restore(path)
 
 
-# ---------------------------------------------------------------- shim parity
+# -------------------------------------------------------------- run determinism
 
-def test_shim_matches_experiment_api():
-    """Legacy run_training == Experiment.run(eval_at_end=True), including
-    keep_state payloads (the PR-2/PR-3 parity tests run through this)."""
+def test_experiment_run_is_deterministic():
+    """Two fresh handles on the same spec produce identical results,
+    including keep_last payloads (the PR-2/PR-3 parity tests lean on this)."""
     spec = _small()
-    exp = Experiment.from_spec(spec)
-    r_new = exp.run(12, eval_at_end=True, keep_last=True)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        r_old = run_training(spec.to_run_config(keep_state=True))
-    assert r_new.returns == r_old.returns
-    assert r_new.eval_steps == r_old.eval_steps
-    np.testing.assert_array_equal(r_new.last_priorities,
-                                  r_old.last_priorities)
-    assert r_old.state is not None and r_new.state is not None
+    r_a = Experiment.from_spec(spec).run(12, eval_at_end=True,
+                                         keep_last=True)
+    r_b = Experiment.from_spec(spec).run(12, eval_at_end=True,
+                                         keep_last=True)
+    assert r_a.returns == r_b.returns
+    assert r_a.eval_steps == r_b.eval_steps
+    np.testing.assert_array_equal(r_a.last_priorities, r_b.last_priorities)
+    assert r_a.state is not None and r_b.state is not None

@@ -8,7 +8,7 @@ import pytest
 from repro.core.ofenet import OFENetConfig
 from repro.rl import apex, make_env
 from repro.rl.envs import ENVS, rollout_return
-from repro.rl.runner import RunConfig, run_training
+from repro.rl import Experiment, ExperimentSpec
 from repro.rl.sac import SACConfig, sac_init, sac_update, sample_action
 from repro.rl.td3 import TD3Config, policy, td3_init, td3_update
 
@@ -107,20 +107,22 @@ def test_collect_timeout_resets():
 def test_sac_learns_pendulum():
     """End-to-end: distributed SAC+OFENet+DenseNet beats the random policy
     decisively on pendulum within a small budget."""
-    cfg = RunConfig(env="pendulum", algo="sac", num_units=64, num_layers=2,
-                    ofenet_units=16, ofenet_layers=2, total_steps=1500,
-                    warmup_steps=300, eval_every=500, n_core=1, n_env=16,
-                    eval_episodes=3, seed=0)
-    res = run_training(cfg)
+    spec = ExperimentSpec().override(
+        env="pendulum", algo="sac", num_units=64, num_layers=2,
+        ofenet_units=16, ofenet_layers=2, total_steps=1500,
+        warmup_steps=300, eval_every=500, n_core=1, n_env=16,
+        eval_episodes=3, seed=0)
+    res = Experiment.from_spec(spec).run(eval_at_end=True)
     # random policy scores ~-1200 on pendulum; a learning agent is decisively
     # above that within this budget (full convergence ~-200 needs ~10k steps)
     assert res.max_return > -1000, res.returns
 
 
-def test_run_training_smoke_all_flags():
-    cfg = RunConfig(env="pointmass", algo="td3", num_units=16, num_layers=1,
-                    use_ofenet=False, distributed=False, prioritized=False,
-                    total_steps=30, warmup_steps=50, eval_every=30,
-                    batch_size=32, eval_episodes=1)
-    res = run_training(cfg)
+def test_experiment_smoke_all_flags():
+    spec = ExperimentSpec().override(
+        env="pointmass", algo="td3", num_units=16, num_layers=1,
+        use_ofenet=False, distributed=False, prioritized=False,
+        total_steps=30, warmup_steps=50, eval_every=30,
+        batch_size=32, eval_episodes=1)
+    res = Experiment.from_spec(spec).run(eval_at_end=True)
     assert len(res.returns) >= 1 and np.isfinite(res.returns[-1])

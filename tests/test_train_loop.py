@@ -1,8 +1,8 @@
 """Scan-superstep training loop tests: seed-for-seed parity between
-``RunConfig(loop="scan")`` and the legacy per-step Python loop for BOTH
-replay backends, the host-dispatch bound, n-step return emission against a
-NumPy reference, the priority-staleness metric, the jitted eval rollout, and
-the 4-fake-device mesh-sharded runner (subprocess, like test_substrate)."""
+``execution.loop="scan"`` and the per-step Python loop for BOTH replay
+backends, the host-dispatch bound, n-step return emission against a NumPy
+reference, the priority-staleness metric, the jitted eval rollout, and the
+4-fake-device mesh-sharded runner (subprocess, like test_substrate)."""
 import os
 import subprocess
 import sys
@@ -13,14 +13,19 @@ import numpy as np
 import pytest
 
 from repro.replay import nstep_init, nstep_push_seq
-from repro.rl import make_env
+from repro.rl import Experiment, ExperimentSpec, make_env
 from repro.rl.envs import eval_returns, rollout_return
-from repro.rl.runner import RunConfig, run_training
 
 _BASE = dict(env="pendulum", algo="sac", num_units=16, num_layers=1,
              use_ofenet=False, distributed=True, n_core=1, n_env=4,
              total_steps=12, warmup_steps=8, eval_every=6, eval_episodes=1,
-             replay_capacity=256, batch_size=16, keep_state=True)
+             replay_capacity=256, batch_size=16)
+
+
+def _run(**overrides):
+    """One-shot run via the Experiment handle (flat keys = spec aliases)."""
+    spec = ExperimentSpec().override(**overrides)
+    return Experiment.from_spec(spec).run(eval_at_end=True, keep_last=True)
 
 
 # ------------------------------------------------------- scan/python parity
@@ -28,11 +33,11 @@ _BASE = dict(env="pendulum", algo="sac", num_units=16, num_layers=1,
 @pytest.mark.parametrize("backend,n_step", [("device", 1), ("device", 3),
                                             ("host", 1), ("host", 3)])
 def test_scan_matches_python_loop(backend, n_step):
-    """Same RunConfig => identical returns and final priorities across loop
+    """Same spec => identical returns and final priorities across loop
     drivers, for the device replay and the host (io_callback) replay."""
     cfg = dict(_BASE, replay_backend=backend, n_step=n_step)
-    r_py = run_training(RunConfig(**cfg, loop="python"))
-    r_sc = run_training(RunConfig(**cfg, loop="scan"))
+    r_py = _run(**cfg, loop="python")
+    r_sc = _run(**cfg, loop="scan")
     np.testing.assert_allclose(r_sc.returns, r_py.returns, rtol=1e-4)
     np.testing.assert_allclose(r_sc.last_priorities, r_py.last_priorities,
                                rtol=1e-3, atol=1e-5)
@@ -48,8 +53,8 @@ def test_scan_matches_python_loop_sranks():
     """srank instrumentation points must agree across loop drivers even when
     srank_every does not divide eval_every (scan chunks stop at both)."""
     cfg = dict(_BASE, replay_backend="device", srank_every=4)
-    r_py = run_training(RunConfig(**cfg, loop="python"))
-    r_sc = run_training(RunConfig(**cfg, loop="scan"))
+    r_py = _run(**cfg, loop="python")
+    r_sc = _run(**cfg, loop="scan")
     assert len(r_py.sranks) == len(r_sc.sranks) == 3
     assert r_py.sranks == r_sc.sranks
     np.testing.assert_allclose(r_sc.returns, r_py.returns, rtol=1e-4)
@@ -70,9 +75,9 @@ def test_scan_superstep_fused_block_backend_matches_jnp(monkeypatch):
 
     cfg = dict(_BASE, replay_backend="device", use_ofenet=True,
                ofenet_layers=2, ofenet_units=16, loop="scan")
-    r_jnp = run_training(RunConfig(**cfg, block_backend="jnp"))
+    r_jnp = _run(**cfg, block_backend="jnp")
     assert calls["n"] == 0                     # jnp backend never routes here
-    r_fused = run_training(RunConfig(**cfg, block_backend="fused"))
+    r_fused = _run(**cfg, block_backend="fused")
     assert calls["n"] > 0                      # fused path actually traced
     np.testing.assert_allclose(r_fused.returns, r_jnp.returns, rtol=1e-3)
     np.testing.assert_allclose(r_fused.last_priorities, r_jnp.last_priorities,
@@ -84,8 +89,8 @@ def test_scan_matches_python_loop_pallas_kernel():
     """Loop driver parity must hold through the Pallas sum-tree too."""
     cfg = dict(_BASE, total_steps=6, eval_every=6, replay_capacity=128,
                replay_backend="device", replay_kernel="pallas")
-    r_py = run_training(RunConfig(**cfg, loop="python"))
-    r_sc = run_training(RunConfig(**cfg, loop="scan"))
+    r_py = _run(**cfg, loop="python")
+    r_sc = _run(**cfg, loop="scan")
     np.testing.assert_allclose(r_sc.returns, r_py.returns, rtol=1e-4)
 
 
@@ -141,8 +146,8 @@ def test_nstep_emission_matches_numpy_reference():
 
 def test_nstep_one_is_identity_semantics():
     """n_step=1 keeps the legacy transition schema (no disc column)."""
-    res = run_training(RunConfig(**dict(_BASE, total_steps=4, eval_every=4,
-                                        replay_backend="device", n_step=1)))
+    res = _run(**dict(_BASE, total_steps=4, eval_every=4,
+                      replay_backend="device", n_step=1))
     assert "disc" not in res.last_batch
 
 
@@ -150,13 +155,13 @@ def test_nstep_one_is_identity_semantics():
 
 def test_staleness_metric_tracks_add_age():
     cfg = dict(_BASE, replay_backend="device", total_steps=30, eval_every=30)
-    res = run_training(RunConfig(**cfg, loop="scan"))
+    res = _run(**cfg, loop="scan")
     # sampled rows were added between warmup (step 0) and the last step
     assert 0.0 <= res.metrics["staleness_mean"] <= cfg["total_steps"]
     assert res.metrics["staleness_p50"] <= res.metrics["staleness_max"]
     assert res.metrics["staleness_max"] <= cfg["total_steps"]
     # host buffer does not stamp rows: staleness keys omitted (no sentinel)
-    res_h = run_training(RunConfig(**dict(cfg, replay_backend="host")))
+    res_h = _run(**dict(cfg, replay_backend="host"))
     assert not any(k.startswith("staleness") for k in res_h.metrics)
 
 
@@ -196,20 +201,27 @@ def _counted(name):
 for _name in calls:
     setattr(shr, _name, _counted(_name))
 
-from repro.rl import RunConfig, run_training
+from repro.rl import Experiment, ExperimentSpec
+
+def run(**kw):
+    spec = ExperimentSpec().override(**kw)
+    return Experiment.from_spec(spec).run(eval_at_end=True, keep_last=True)
 
 base = dict(env="pendulum", algo="sac", num_units=16, num_layers=1,
             use_ofenet=False, distributed=True, n_core=1, n_env=8,
             total_steps=10, warmup_steps=16, eval_every=5, eval_episodes=2,
             replay_capacity=512, batch_size=16, replay_backend="device")
-single = run_training(RunConfig(**base, loop="scan"))
+single = run(**base, loop="scan")
 assert calls["collect_and_add_sharded"] == 0      # single shard: direct path
-r_scan = run_training(RunConfig(**base, loop="scan", mesh_shards=4))
+r_scan = run(**base, loop="scan", mesh_shards=4)
 assert calls["collect_and_add_sharded"] > 0, calls
 assert calls["sharded_replay_sample"] > 0, calls
 assert r_scan.metrics["host_dispatches"] <= 10, r_scan.metrics
 assert r_scan.metrics["staleness_mean"] >= 0
-r_py = run_training(RunConfig(**base, loop="python", mesh_shards=4))
+import warnings
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")               # python loop on a mesh
+    r_py = run(**base, loop="python", mesh_shards=4)
 np.testing.assert_allclose(r_scan.returns, r_py.returns, rtol=1e-4)
 assert np.isfinite(r_scan.returns).all()
 # same env/budget/seed: the sharded learning curve stays in the same
@@ -217,7 +229,7 @@ assert np.isfinite(r_scan.returns).all()
 assert abs(np.mean(r_scan.returns) - np.mean(single.returns)) < 400, (
     r_scan.returns, single.returns)
 # n-step rides the sharded ring too
-r_n3 = run_training(RunConfig(**base, loop="scan", mesh_shards=4, n_step=3))
+r_n3 = run(**base, loop="scan", mesh_shards=4, n_step=3)
 assert np.isfinite(r_n3.returns).all()
 print("OK")
 """
