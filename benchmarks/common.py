@@ -62,6 +62,36 @@ def bench_run(name: str, spec: ExperimentSpec, extra: Dict = None,
     return row
 
 
+def fleet_rows(sweep, name_fn, extra_fn=None) -> List[Dict]:
+    """Aggregate a finished ``repro.rl.Sweep`` into ``bench_run``-schema
+    rows: one row per sub-fleet (= per grid point — ``from_grid`` groups a
+    point's seed replicas into one fleet), seeds aggregated the same way
+    ``bench_run`` aggregates its sequential seed loop, and ``us_per_call``
+    normalized per member-step from the fleet's shared wall clock."""
+    import numpy as np
+    rows = []
+    for fl in sweep.fleets:
+        results = fl.results()
+        maxes = [r.max_return for r in results]
+        point = fl.points[0]
+        row = {
+            "name": name_fn(point),
+            "us_per_call": 1e6 * fl._wall / max(fl.step * fl.n_members, 1),
+            "derived": round(float(np.mean(maxes)), 2),
+            "std": round(float(np.std(maxes)), 2),
+            "final_return": round(float(np.mean(
+                [r.final_return for r in results])), 2),
+            "params": results[0].param_count,
+            "srank": results[-1].sranks[-1] if results[-1].sranks else "",
+            "seeds": fl.n_members,
+            "fleet": True,
+        }
+        if extra_fn:
+            row.update(extra_fn(point))
+        rows.append(row)
+    return rows
+
+
 def print_rows(rows: List[Dict]) -> None:
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")

@@ -55,6 +55,7 @@ MODULES = [
     "benchmarks.replay_micro",
     "benchmarks.dense_stack",
     "benchmarks.loop_fusion",
+    "benchmarks.sweep_fleet",
     "benchmarks.lm_substrate",
 ]
 

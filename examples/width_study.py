@@ -1,32 +1,42 @@
 """The paper's central claim, §4.1: wider helps, deeper hurts — reproduced
 as a single runnable study with loss-surface sharpness readouts.
 
-    PYTHONPATH=src python examples/width_study.py [--steps 400]
+The three shape variants run through ``Sweep.from_grid``: the irregular
+grid partitions into one vmapped fleet per compiled shape (each variant
+has its own parameter shapes, so here that is one fleet per row — a seed
+battery per row would batch inside each fleet for free; try ``seeds=5``).
+
+    PYTHONPATH=src python examples/width_study.py [--steps 400] [--seeds 1]
         [--override execution.loop=scan]
 """
 import argparse
 
-from repro.rl import Experiment, parse_overrides, presets
+from repro.rl import Sweep, parse_overrides, presets
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seeds", type=int, default=1)
     ap.add_argument("--override", action="append", default=[],
                     metavar="KEY=VALUE")
     args = ap.parse_args()
     base = presets.get("fig4-grid").override(
         n_env=1, total_steps=args.steps, warmup_steps=300,
         eval_every=max(args.steps // 2, 1),
+        replay_backend="device", loop="scan",
         **parse_overrides(args.override))
     grid = [("deep (6x32)", dict(num_layers=6, num_units=32)),
             ("base (2x32)", dict(num_layers=2, num_units=32)),
             ("wide (2x256)", dict(num_layers=2, num_units=256))]
-    print(f"{'config':<14}{'max return':>12}{'params':>10}")
-    for name, shp in grid:
-        res = Experiment.from_spec(base.override(**shp)).run(
-            eval_at_end=True)
-        print(f"{name:<14}{res.max_return:>12.1f}{res.param_count:>10,}")
+    sweep = Sweep.from_grid(base, axis=[shp for _, shp in grid],
+                            seeds=args.seeds)
+    results = sweep.run(eval_at_end=True)
+    print(f"{'config':<14}{'seed':>6}{'max return':>12}{'params':>10}")
+    for (name, _), mr in zip(
+            (row for row in grid for _ in range(args.seeds)), results):
+        print(f"{name:<14}{mr.seed:>6}{mr.result.max_return:>12.1f}"
+              f"{mr.result.param_count:>10,}")
 
 
 if __name__ == "__main__":

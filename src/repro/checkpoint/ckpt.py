@@ -46,6 +46,11 @@ def save(path: str, tree: Any, *, metadata: Optional[dict] = None) -> None:
 def restore(path: str, template: Any, *, shardings: Any = None) -> Any:
     """Load arrays and rebuild ``template``'s structure (dtypes preserved).
 
+    Template leaves only need a shape — concrete arrays and abstract
+    ``jax.ShapeDtypeStruct`` leaves (e.g. from ``jax.eval_shape`` over a
+    fleet init, see ``repro.rl.sweep``) both work, so callers can build
+    restore templates without materializing a throwaway training state.
+
     ``shardings``: optional matching pytree of jax.sharding.Sharding — leaves
     are device_put with them (multi-pod restore path).
     """
@@ -61,9 +66,11 @@ def restore(path: str, template: Any, *, shardings: Any = None) -> Any:
             if key not in data:
                 raise KeyError(f"checkpoint missing leaf {key!r}")
             arr = data[key]
-            if tuple(arr.shape) != tuple(np.shape(tmpl)):
+            want = tuple(tmpl.shape) if hasattr(tmpl, "shape") \
+                else tuple(np.shape(tmpl))
+            if tuple(arr.shape) != want:
                 raise ValueError(f"shape mismatch for {key}: "
-                                 f"{arr.shape} vs {np.shape(tmpl)}")
+                                 f"{arr.shape} vs {want}")
             if flat_shard is not None and key in flat_shard:
                 leaves.append(jax.device_put(arr, flat_shard[key]))
             else:

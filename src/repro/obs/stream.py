@@ -16,6 +16,14 @@ fanning out to the spec's sinks; ``drain()`` empties the queue and is called
 next to ``jax.effects_barrier()`` in ``Experiment.save``. ``state()`` /
 ``load_state`` round-trip the stream cursor through checkpoint metadata so a
 resumed run continues the stream where it left off.
+
+Fleet demux (``repro.rl.sweep``): a vmapped fleet emits its chunk stream
+with a leading member axis; the fleet driver slices that per member and
+hands each member's ``(n_steps,)`` view to that member's OWN ``ObsRun``
+(constructed with ``member=<label>`` and a per-member ``log_dir`` subdir).
+Every row an ``ObsRun`` with a member label writes carries a ``"member"``
+field, so merged/sweep-level tooling can demultiplex streams after the
+fact (``repro.obs.report`` accepts a sweep directory of member subdirs).
 """
 from __future__ import annotations
 
@@ -33,10 +41,14 @@ class ObsRun:
     """Owns the sinks, the downsampling cursor, counters and the trace hook
     for one experiment. Constructed from an ``ObsSpec``-shaped object
     (``enabled``/``log_every``/``sinks``/``trace``/``log_dir``); when
-    ``enabled`` is False every method is a cheap no-op."""
+    ``enabled`` is False every method is a cheap no-op.
 
-    def __init__(self, spec):
+    ``member`` tags every row this run writes with a fleet member label
+    (sweep demux); solo experiments leave it None and rows are unchanged."""
+
+    def __init__(self, spec, member: Optional[str] = None):
         self.spec = spec
+        self.member = member
         self.enabled = bool(spec.enabled)
         self.log_every = int(spec.log_every)
         self.rows_written = 0
@@ -62,6 +74,9 @@ class ObsRun:
 
     def _emit(self, rows: Sequence[Row]) -> None:
         if self._writer is not None and rows:
+            if self.member is not None:
+                for r in rows:
+                    r.setdefault("member", self.member)
             self._writer.write(rows)
 
     def drain(self) -> None:

@@ -8,6 +8,13 @@ host ``rl.replay.PrioritizedReplay`` (stratified proportional sampling,
 ``(|p| + eps) ** alpha`` priorities, ``(N * p) ** -beta`` importance weights
 normalized by the batch max); the host buffer remains the parity oracle in
 tests/test_device_replay.py.
+
+Member-axis contract (``repro.rl.sweep``): with ``backend="xla"`` every op
+here is pure jnp with static shapes, so the fleet driver vmaps the whole
+add/sample/update pipeline over a leading member axis — ``ReplayState``
+just grows one more leaf dimension. Keep new ops vmappable (no host
+callbacks, no data-dependent shapes); the Pallas sum-tree is excluded from
+fleets until vmap-of-pallas_call is pinned down (ROADMAP).
 """
 from __future__ import annotations
 

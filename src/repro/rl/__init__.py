@@ -60,6 +60,34 @@ steps, so obs knobs never touch the compiled body (tests/test_obs.py).
 ``python -m repro.obs.report <log_dir>`` summarizes throughput, grad-norm /
 staleness trajectories and instability events from the stream.
 
+Sweeps (``repro.rl.sweep``): run a whole paper figure as ONE device
+program. A ``Fleet`` stacks N members' training states along a leading
+member axis and advances all of them through one jitted ``lax.scan``
+chunk whose body is ``jax.vmap`` of the Trainer superstep;
+``Sweep.from_grid`` expands a preset x ``axis`` overrides x ``seeds``
+grid and partitions it into per-compiled-shape sub-fleets (reported via
+``Sweep.partition``)::
+
+    from repro.rl import Sweep
+
+    sweep = Sweep.from_grid("fig3-width",
+                            axis={"num_units": [64, 256]}, seeds=5)
+    sweep.run()                          # 2 compiled programs, 10 members
+    best = max(sweep.results(), key=lambda m: m.result.max_return)
+
+Fleets default to the device replay backend (the host io_callback replay
+cannot batch under vmap — building a host-backend fleet raises
+``SpecError``), evaluate per member at the same absolute steps as solo
+runs, support per-member early stopping (``stop_at_return`` /
+``set_done`` freeze a member's carry without perturbing neighbors or
+recompiling), checkpoint through the same ``ckpt.py`` path
+(``Fleet.save``/``restore`` — fleet resume is bitwise at any split), give
+each member its own obs stream (``<log_dir>/<member>/`` subdirs, rows
+tagged ``member``), and offer PBT-style ``exploit_explore()`` between
+chunks. Member-vs-solo parity is allclose (documented
+``sweep.SOLO_PARITY_RTOL/ATOL``), not bitwise: vmap batches members'
+matmuls together. Throughput: ``benchmarks/sweep_fleet.py``.
+
 Presets (``repro.rl.presets``): every paper scenario by name —
 ``fig1-depth``, ``fig3-width``, ``fig4-grid``, ``fig5-connectivity``,
 ``fig6-ofenet``, ``fig8-distributed``, ``fig10-ablation``,
@@ -77,4 +105,5 @@ from repro.rl.experiment import (EvalSpec, ExecutionSpec, Experiment,
                                  ExperimentSpec, NetworkSpec, ObsSpec,
                                  OFENetSpec, ReplaySpec, SpecError,
                                  SpecWarning, parse_overrides)
+from repro.rl.sweep import Fleet, MemberResult, Sweep
 from repro.rl import presets

@@ -50,9 +50,12 @@ scalar stream to the configured sinks, the python driver logs per step, and
 drains the host-replay callbacks. Enabling obs changes training outputs
 bitwise not at all (tests/test_obs.py).
 
-Paper scenarios are named in ``repro.rl.presets``. The flat ``RunConfig`` /
-``run_training`` surface is gone — both names now raise with a porting
-message (``repro.rl.runner``).
+Paper scenarios are named in ``repro.rl.presets``. Grids of spec variants
+(a figure's sweep, a seed battery) can run as ONE vmapped device program
+per compiled shape through ``repro.rl.sweep`` (``Sweep.from_grid`` /
+``Fleet``) instead of a sequential loop of ``Experiment``s. The flat
+``RunConfig`` / ``run_training`` surface is gone — both names now raise
+with a porting message (``repro.rl.runner``).
 """
 from __future__ import annotations
 

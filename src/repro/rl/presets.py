@@ -89,6 +89,18 @@ _PRESETS: Dict[str, ExperimentSpec] = {
         num_units=16, num_layers=1, use_ofenet=False, n_core=1, n_env=4,
         total_steps=12, warmup_steps=8, eval_every=6, eval_episodes=1,
         replay_capacity=256, batch_size=16),
+    # fleet-ready tiny scenario (device replay — the vmapped sweep driver's
+    # requirement) for CI fleet smoke + benchmarks/sweep_fleet.py
+    # dims sit in the op-overhead-bound regime where fleet batching pays:
+    # uniform replay (the PER sum-tree's scatter writes are serial
+    # per-element on CPU and scale linearly under vmap — see the
+    # repro.rl.sweep docstring) and small batch/capacity so per-member
+    # compute stays below the per-op fixed cost the fleet amortizes
+    "fleet-smoke": _BASE.override(
+        num_units=16, num_layers=1, use_ofenet=False, n_core=1, n_env=4,
+        total_steps=64, warmup_steps=16, eval_every=32, eval_episodes=1,
+        replay_capacity=256, batch_size=8, prioritized=False,
+        replay_backend="device", loop="scan"),
 }
 
 

@@ -533,12 +533,16 @@ class Trainer:
         return self._chunks[sig]
 
     # ------------------------------------------------------- initial state
-    def _fresh_state(self):
+    def _fresh_state(self, seed=None):
         """Agent/actor/replay init (shapes + seed-derived values), WITHOUT
         the warmup collect. Returns the pre-warmup TrainLoopState and the
-        warmup key (same PRNG schedule as the original monolithic init)."""
+        warmup key (same PRNG schedule as the original monolithic init).
+
+        ``seed`` overrides the spec seed and may be a traced int32 — the
+        fleet driver (``repro.rl.sweep``) vmaps this over a member seed
+        vector so a whole sweep initializes as one device program."""
         env = self.env
-        key = jax.random.key(self.seed)
+        key = jax.random.key(self.seed if seed is None else seed)
         key, k_init, k_actor = jax.random.split(key, 3)
         agent = self.init_fn(k_init, self.acfg)
         self.n_params = tree_size(agent["params"])
