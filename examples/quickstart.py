@@ -22,6 +22,20 @@ without changing a single trained bit, then summarize with
 The report flags loss spikes (>10x the run median), non-finite values and
 srank collapse. Add ``--trace 2`` to also capture a jax.profiler trace of
 the first two chunk dispatches under ``<log-dir>/trace`` for TensorBoard.
+
+Guarding a run: ``--guard halt`` turns on in-loop health checks (non-finite
+streams/params, spikes, srank collapse) that stop the run at the exact
+offending step with a ``GuardViolation`` listing every detection;
+``--guard skip`` instead rewinds the current segment and re-runs it with a
+``fold_in``-perturbed RNG key (bounded by ``guard.max_recoveries``). For
+unattended training — durable checkpoints, rollback recovery, auto-resume
+after a crash, and a structured ``incident.json`` — run under the
+supervisor instead:
+
+    PYTHONPATH=src python -m repro.guard.supervise quickstart \\
+        --dir runs/q --retries 3
+
+which survives SIGKILL/OOM bitwise (see ``repro.guard``).
 """
 import argparse
 
@@ -46,12 +60,16 @@ def main():
     ap.add_argument("--trace", type=int, default=0, metavar="N",
                     help="profile the first N chunk dispatches "
                          "into <log-dir>/trace (needs --log-dir)")
+    ap.add_argument("--guard", default="", choices=["", "halt", "skip"],
+                    help="health guards: halt on divergence, or skip the "
+                         "bad segment with a perturbed key (crash-safe "
+                         "rollback: python -m repro.guard.supervise)")
     args = ap.parse_args()
 
     if args.resume:
-        if args.override or args.units is not None:
-            ap.error("--override/--units cannot be combined with --resume: "
-                     "the spec comes from the checkpoint metadata")
+        if args.override or args.units is not None or args.guard:
+            ap.error("--override/--units/--guard cannot be combined with "
+                     "--resume: the spec comes from the checkpoint metadata")
         exp = Experiment.restore(args.resume)
         print(f"resumed at step {exp.step} (spec from checkpoint metadata)")
     else:
@@ -65,11 +83,13 @@ def main():
         elif args.trace:
             ap.error("--trace needs --log-dir (traces land in "
                      "<log-dir>/trace)")
+        guard = ({"guard.enabled": True, "guard.policy": args.guard}
+                 if args.guard else {})
         spec = presets.get("quickstart").override(
             num_units=args.units or 128, total_steps=args.steps,
             eval_every=max(args.steps // 8, 1),
             srank_every=max(args.steps // 8, 1),
-            **obs, **parse_overrides(args.override))
+            **obs, **guard, **parse_overrides(args.override))
         exp = Experiment.from_spec(spec)
 
     res = exp.run(args.steps, progress=lambda s, r, m: print(

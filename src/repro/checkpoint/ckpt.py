@@ -1,15 +1,32 @@
 """Checkpointing: pytree <-> npz with path-keyed leaves (sharding-aware).
 
-``save`` gathers every leaf to host (fine on CPU / single-host; on a real pod each
-host would write its addressable shards — the path-keyed layout already
+``save`` gathers every leaf to host (fine on CPU / single-host; on a real pod
+each host would write its addressable shards — the path-keyed layout already
 supports that by writing per-leaf files under a directory instead).
 ``restore`` rebuilds the exact pytree structure from a template and can
 re-shard onto a mesh via ``shardings``.
+
+Atomicity contract: a checkpoint is COMMITTED by the single ``os.replace``
+of its npz. Metadata is embedded INSIDE the npz (a ``__meta__json`` uint8
+entry), so the array payload and its metadata can never tear apart — a crash
+at any point leaves either the complete old pair or the complete new pair.
+The sibling ``<path>.meta.json`` is still written (itself atomically, after
+the npz commit) as a human-readable convenience, but it is derived state:
+``load_metadata`` prefers the npz-embedded copy and only falls back to the
+sidecar for pre-embedding checkpoints. Staging files carry a pid+uuid
+suffix, so concurrent saves to the same path (fleet members sharing a log
+dir, a supervisor racing a user save) never clobber each other's staging —
+last committed rename wins, both committed states are complete.
+
+Durable multi-checkpoint management (checksummed commits, keep-last-K
+retention, corrupt-checkpoint fallback) lives one level up in
+``repro.guard.store``.
 """
 from __future__ import annotations
 
 import json
 import os
+import uuid
 from pathlib import Path
 from typing import Any, Optional
 
@@ -17,6 +34,10 @@ from repro.obs.trace import annotate
 
 import jax
 import numpy as np
+
+# reserved npz entry holding the JSON-encoded metadata; never a tree leaf
+# (tree keys come from tree_flatten_with_path and cannot be dunder-shaped)
+META_KEY = "__meta__json"
 
 
 def _flatten(tree: Any):
@@ -33,14 +54,24 @@ def save(path: str, tree: Any, *, metadata: Optional[dict] = None) -> None:
     with annotate("repro.ckpt.save"):
         items, _ = _flatten(tree)
         arrays = {k: np.asarray(v) for k, v in items.items()}
+        if metadata is not None:
+            arrays[META_KEY] = np.frombuffer(
+                json.dumps(metadata).encode("utf-8"), dtype=np.uint8)
         p = Path(path)
         p.parent.mkdir(parents=True, exist_ok=True)
-        tmp = str(p) + ".tmp"
+        # unique staging name: concurrent saves to one path must not share
+        # a temp file, and np.savez appends ".npz" unless already present
+        tag = f".{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp.npz"
+        tmp = str(p) + tag
         np.savez(tmp, **arrays)
-        os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, str(p))
+        os.replace(tmp, str(p))                      # THE commit point
         if metadata is not None:
-            Path(str(p) + ".meta.json").write_text(
-                json.dumps(metadata, indent=1))
+            # derived human-readable sidecar: written atomically AFTER the
+            # commit so it can only ever lag the npz, never lead it — and
+            # load_metadata trusts the embedded copy first anyway
+            side_tmp = str(p) + ".meta.json" + tag
+            Path(side_tmp).write_text(json.dumps(metadata, indent=1))
+            os.replace(side_tmp, str(p) + ".meta.json")
 
 
 def restore(path: str, template: Any, *, shardings: Any = None) -> Any:
@@ -79,5 +110,18 @@ def restore(path: str, template: Any, *, shardings: Any = None) -> Any:
 
 
 def load_metadata(path: str) -> Optional[dict]:
-    meta = Path(str(path) + ".meta.json")
+    """The checkpoint's metadata dict, or None when it has none.
+
+    The npz-embedded ``__meta__json`` entry is authoritative (committed
+    atomically with the arrays); the ``.meta.json`` sidecar is only
+    consulted for checkpoints written before metadata embedding."""
+    p = Path(path)
+    if p.exists():
+        try:
+            with np.load(str(p), allow_pickle=False) as data:
+                if META_KEY in data.files:
+                    return json.loads(bytes(data[META_KEY]).decode("utf-8"))
+        except (OSError, ValueError):
+            pass                 # torn/corrupt npz: let the sidecar speak
+    meta = Path(str(p) + ".meta.json")
     return json.loads(meta.read_text()) if meta.exists() else None

@@ -1,0 +1,43 @@
+"""repro.guard — fault tolerance for long training runs.
+
+The paper's whole premise is that large-network RL runs are UNSTABLE:
+divergence, rank collapse and long distributed runs are the failure modes
+its three-fold method exists to tame. This package makes the reproduction
+survive its own failures instead of dying on the first NaN, preemption or
+torn checkpoint. Four pieces:
+
+* ``guard.store``   — ``DurableStore``: atomic npz+meta PAIR commits
+  (staged write + checksum manifest + single directory rename), keep-last-K
+  retention, and ``restore_latest()`` that verifies checksums and falls
+  back past a torn/corrupt checkpoint to the previous good one.
+* ``guard.monitor`` — ``GuardSpec`` (the ``guard`` section of
+  ``ExperimentSpec``) + ``Monitor``: in-loop health checks over the
+  existing obs stream and cheap all-finite reductions on the live state,
+  detecting non-finite params/grads, loss spikes and srank collapse, with
+  a configurable policy — ``halt`` (raise ``GuardViolation``), ``skip``
+  (discard the bad segment, reseed, retry) or ``rollback`` (restore the
+  last good durable checkpoint with a ``fold_in``-perturbed key). Fleet
+  rollback is PER MEMBER through the segment-end ``_tree_where`` freeze
+  machinery, so healthy neighbors stay bitwise untouched.
+* ``guard.supervise`` — ``python -m repro.guard.supervise <preset>``: a
+  crash-safe supervisor running an ``Experiment``/``Fleet`` in worker
+  subprocesses with periodic durable saves, auto-resuming after any crash
+  (SIGKILL, OOM, preemption) with bounded retries + exponential backoff,
+  and exiting non-zero with a structured ``incident.json`` once the retry
+  budget is spent.
+* ``guard.chaos``   — deterministic, step-addressed fault injection (NaN
+  into the update at step k, SIGKILL at step k, crash mid-save, checkpoint
+  truncation/bit-flip, transient sink IO errors) so every recovery path is
+  exercised by tests instead of trusted.
+
+Recovery is exact by construction: auto-resume rides the PR-5 bitwise
+resume-anywhere contract (interrupted == uninterrupted at any split), so a
+supervised run that crashed and recovered produces the SAME eval returns
+and final params as an uninterrupted run. The NaN-rollback path is equally
+deterministic — restore latest good + ``fold_in(key, recovery_count)`` —
+so the rolled-back trajectory is a documented, reproducible function of
+(checkpoint, recovery count), pinned by tests/test_guard.py.
+"""
+from repro.guard.monitor import (GuardSpec, GuardViolation, Monitor,
+                                 Violation, all_finite, member_finite)
+from repro.guard.store import CheckpointCorrupt, DurableStore

@@ -1,0 +1,192 @@
+"""Deterministic, step-addressed fault injection for the guard test matrix.
+
+Every recovery path in ``repro.guard`` is exercised by INJECTED faults, not
+trusted: tests (and the supervisor's ``--chaos`` flag) arm one of these and
+assert the documented recovery happened bit-for-bit. All faults are
+deterministic — addressed by learner step or by a named commit point, never
+by wall clock — so a failing chaos test replays exactly.
+
+Faults:
+
+* ``poison_params(handle, member=None)`` — host-side one-shot: writes NaN
+  into the live agent params of an ``Experiment`` (or one member of a
+  ``Fleet``) between ``run()`` calls. The next chunk's stream/param checks
+  detect it; because the poke is not part of the training program, a
+  skip/rollback recovery replays CLEAN — this is the transient-divergence
+  fault the recovery policies exist for.
+* ``arm_nan_step(trainer, at_step)`` — traced persistent fault: wraps the
+  superstep so params become NaN exactly when the agent's update counter
+  hits ``at_step``. Rolling back below ``at_step`` re-poisons on replay, so
+  this fault deterministically exhausts the recovery budget — it tests
+  ``halt`` semantics and budget exhaustion, not successful recovery.
+* ``kill_now()`` — SIGKILL the current process (no atexit, no cleanup):
+  the supervisor's crash-mid-chunk fault.
+* ``arm_kill_mid_save(store)`` — SIGKILL at the store's pre-commit seam:
+  every checkpoint file staged and checksummed, the commit rename never
+  happens. ``restore_latest`` must land on the previous good checkpoint.
+* ``corrupt_checkpoint(path, mode)`` — bit-flip or truncate a COMMITTED
+  checkpoint's payload without touching its manifest, so only checksum
+  verification can catch it.
+* ``FlakySink(sink, fails=N)`` — wraps a metric sink to raise transient
+  ``OSError`` on the first N writes (then heal), driving the
+  ``BufferedWriter`` retry path; ``fails=None`` never heals, driving the
+  permanent-error path (surfaces at ``drain()``).
+* ``OneShot(dir, name)`` — a filesystem latch (O_EXCL marker file) making
+  any fault fire exactly once ACROSS PROCESS ATTEMPTS: a supervised worker
+  that injected its fault, died, and was restarted must not re-inject.
+"""
+from __future__ import annotations
+
+import os
+import signal
+from pathlib import Path
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class OneShot:
+    """Cross-process single-fire latch: ``fire()`` is True exactly once per
+    marker file (atomic ``O_CREAT|O_EXCL``), no matter how many worker
+    attempts the supervisor spawns."""
+
+    def __init__(self, directory: str, name: str):
+        self.path = Path(directory) / f"chaos-{name}.fired"
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+
+    def fired(self) -> bool:
+        return self.path.exists()
+
+    def fire(self) -> bool:
+        """Atomically claim the latch; True for the single winning call."""
+        try:
+            fd = os.open(self.path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return False
+        os.close(fd)
+        return True
+
+
+# ---------------------------------------------------------------- divergence
+
+def _nan_params(params):
+    return jax.tree_util.tree_map(
+        lambda x: (jnp.full_like(x, jnp.nan)
+                   if jnp.issubdtype(x.dtype, jnp.floating) else x), params)
+
+
+def poison_params(handle, member: Optional[int] = None) -> None:
+    """One-shot host poke: NaN the live params of an ``Experiment`` (or of
+    ``Fleet`` member ``member``) between ``run()`` calls. Raises if the
+    handle has no initialized state yet."""
+    if hasattr(handle, "_fls"):                     # Fleet
+        if handle._fls is None:
+            raise RuntimeError("poison_params: fleet not initialized")
+        if member is None:
+            raise RuntimeError("poison_params: fleet poke needs member=")
+        fls = handle._fls
+
+        def poke(x):
+            if not jnp.issubdtype(x.dtype, jnp.floating):
+                return x
+            return x.at[member].set(jnp.nan)
+        agent = dict(fls.agent,
+                     params=jax.tree_util.tree_map(poke,
+                                                   fls.agent["params"]))
+        handle._fls = fls._replace(agent=agent)
+        return
+    if handle._ls is None:                          # Experiment
+        raise RuntimeError("poison_params: experiment not initialized")
+    ls = handle._ls
+    agent = dict(ls.agent, params=_nan_params(ls.agent["params"]))
+    handle._ls = ls._replace(agent=agent)
+
+
+def arm_nan_step(trainer, at_step: int) -> None:
+    """Traced persistent fault: NaN the params feeding the superstep whose
+    agent update counter equals ``at_step`` (fires inside jit, solo and
+    vmapped alike). Must be armed before the first chunk compiles — it
+    clears the trainer's compiled-chunk cache to make sure."""
+    inner = trainer._superstep
+
+    def poisoned(ls):
+        fire = ls.agent["step"] == at_step
+        params = jax.tree_util.tree_map(
+            lambda x: (jnp.where(fire, jnp.full_like(x, jnp.nan), x)
+                       if jnp.issubdtype(x.dtype, jnp.floating) else x),
+            ls.agent["params"])
+        return inner(ls._replace(agent=dict(ls.agent, params=params)))
+
+    trainer._superstep = poisoned
+    trainer._chunks.clear()
+
+
+# -------------------------------------------------------------- crash faults
+
+def kill_now() -> None:
+    """SIGKILL this process: no exception handling, no atexit, no flush —
+    the honest preemption/OOM-killer fault."""
+    os.kill(os.getpid(), signal.SIGKILL)
+
+
+def arm_kill_mid_save(store) -> None:
+    """SIGKILL at the worst checkpoint moment: everything staged and
+    checksummed, one rename short of commit. The staging dir survives as
+    garbage (``clean_staging`` removes it); the previous committed
+    checkpoint must remain the restore target."""
+    store._pre_commit_hook = lambda staging: kill_now()
+
+
+# --------------------------------------------------------- stored-state rot
+
+def corrupt_checkpoint(path, mode: str = "bitflip",
+                       filename: str = "state.npz") -> None:
+    """Damage a COMMITTED checkpoint dir in place, leaving its manifest
+    claiming health — exactly what torn hardware does. ``bitflip`` inverts
+    one byte mid-file (size preserved: only the checksum can tell);
+    ``truncate`` drops the trailing half."""
+    target = Path(path) / filename
+    if not target.exists():
+        raise FileNotFoundError(f"{target}: nothing to corrupt")
+    size = target.stat().st_size
+    if mode == "bitflip":
+        with open(target, "r+b") as f:
+            f.seek(size // 2)
+            byte = f.read(1)
+            f.seek(size // 2)
+            f.write(bytes([byte[0] ^ 0xFF]))
+    elif mode == "truncate":
+        with open(target, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+    else:
+        raise ValueError(f"corrupt mode {mode!r}: bitflip|truncate")
+
+
+# ------------------------------------------------------------ flaky sink IO
+
+class FlakySink:
+    """Wrap a metric sink so its first ``fails`` writes raise a transient
+    ``OSError`` (then heal); ``fails=None`` fails forever (permanent).
+    ``attempts`` counts every write() call, healthy or not — tests assert
+    the BufferedWriter retried exactly as configured."""
+
+    def __init__(self, sink, fails: Optional[int] = 2):
+        self.sink = sink
+        self.fails = fails
+        self.attempts = 0
+        self.delivered = 0
+
+    def write(self, rows: Sequence[dict]) -> None:
+        self.attempts += 1
+        if self.fails is None or self.attempts <= self.fails:
+            raise OSError(f"chaos: transient sink IO error "
+                          f"(attempt {self.attempts})")
+        self.delivered += len(rows)
+        self.sink.write(rows)
+
+    def flush(self) -> None:
+        self.sink.flush()
+
+    def close(self) -> None:
+        self.sink.close()

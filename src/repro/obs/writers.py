@@ -27,6 +27,7 @@ import csv
 import json
 import queue
 import threading
+import time
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Protocol, Sequence
 
@@ -130,13 +131,23 @@ _CLOSE = object()
 
 class BufferedWriter:
     """Async fan-out: one daemon thread drains a bounded queue into every
-    wrapped sink, preserving submission order (single consumer). Errors
-    raised by a sink are captured and re-raised at the next ``drain()`` /
+    wrapped sink, preserving submission order (single consumer).
+
+    Transient IO errors (``OSError`` — a full disk briefly clearing, NFS
+    hiccups, an interrupted write) are retried per sink with bounded
+    exponential backoff (``retries`` x ``backoff * 2**attempt``), so a
+    metric blip cannot kill a training run. Only the FAILING sink's write
+    is retried — healthy sinks never see duplicate rows. Errors that
+    outlive the retry budget, and non-OSError sink bugs (retried zero
+    times), are captured and re-raised at the next ``drain()`` /
     ``close()`` so they surface on the training thread, not in a thread
     traceback nobody reads."""
 
-    def __init__(self, sinks: Iterable[MetricWriter], maxsize: int = 256):
+    def __init__(self, sinks: Iterable[MetricWriter], maxsize: int = 256,
+                 retries: int = 3, backoff: float = 0.05):
         self.sinks = list(sinks)
+        self.retries = int(retries)
+        self.backoff = float(backoff)
         self._q: "queue.Queue" = queue.Queue(maxsize=maxsize)
         self._exc: Optional[BaseException] = None
         self._closed = False
@@ -152,11 +163,22 @@ class BufferedWriter:
                     return
                 if self._exc is None:
                     for s in self.sinks:
-                        s.write(item)
+                        self._write_with_retry(s, item)
             except BaseException as e:          # surfaced via drain()
                 self._exc = e
             finally:
                 self._q.task_done()
+
+    def _write_with_retry(self, sink: MetricWriter,
+                          rows: Sequence[Row]) -> None:
+        for attempt in range(self.retries + 1):
+            try:
+                sink.write(rows)
+                return
+            except OSError:
+                if attempt == self.retries:
+                    raise               # permanent: surfaces at drain()
+                time.sleep(self.backoff * (2 ** attempt))
 
     def write(self, rows: Sequence[Row]) -> None:
         if self._closed:

@@ -88,6 +88,36 @@ chunks. Member-vs-solo parity is allclose (documented
 ``sweep.SOLO_PARITY_RTOL/ATOL``), not bitwise: vmap batches members'
 matmuls together. Throughput: ``benchmarks/sweep_fleet.py``.
 
+Fault tolerance (``repro.guard``, configured by the ``guard`` spec
+section): long runs survive divergence, corrupt checkpoints and crashes.
+``guard.enabled=True`` turns on in-loop health monitoring — non-finite
+metric streams and params (detected at the exact offending step; the
+stream is already emitted bitwise-invisibly, see obs above), loss spikes
+vs a rolling median (``guard.spike_factor``) and srank collapse
+(``guard.srank_collapse``) — with three recovery policies:
+
+* ``halt`` (default): raise ``GuardViolation`` carrying every detection.
+* ``skip`` (solo only): rewind to the pre-segment state, perturb the RNG
+  key with ``fold_in(key, ordinal)`` and re-run the segment.
+* ``rollback``: restore the newest GOOD durable checkpoint from an
+  attached ``DurableStore`` (``exp.attach_guard(store)``) and continue
+  with the perturbed key. In a ``Fleet`` only the diverged member is
+  rolled back — neighbors are bitwise undisturbed.
+
+Recoveries are deterministic: a recovered trajectory equals
+restore + ``fold_in(key, ordinal)`` + rerun, bit for bit, and the budget
+(``guard.max_recoveries``) bounds how many a run may spend. Durable
+checkpoints are staged, sha256-manifested and committed with a single
+rename (``repro.guard.store``) so a crash mid-save can never destroy the
+previous good one. For unattended runs,
+``python -m repro.guard.supervise <preset> --dir runs/x`` wraps a run in
+a crash-safe supervisor: segments with periodic durable saves, auto-resume
+after SIGKILL/OOM (bitwise-equal to the uninterrupted run), bounded
+retries with exponential backoff, and a structured ``incident.json`` when
+the budget is spent. Every recovery path is exercised by deterministic
+fault injection (``repro.guard.chaos``, the supervisor's ``--chaos``
+flag, tests/test_guard.py).
+
 Presets (``repro.rl.presets``): every paper scenario by name —
 ``fig1-depth``, ``fig3-width``, ``fig4-grid``, ``fig5-connectivity``,
 ``fig6-ofenet``, ``fig8-distributed``, ``fig10-ablation``,
@@ -107,3 +137,5 @@ from repro.rl.experiment import (EvalSpec, ExecutionSpec, Experiment,
                                  SpecWarning, parse_overrides)
 from repro.rl.sweep import Fleet, MemberResult, Sweep
 from repro.rl import presets
+from repro.guard import (DurableStore, GuardSpec, GuardViolation, Monitor,
+                         Violation)

@@ -12,8 +12,10 @@ instead of the flat 22-field ``RunConfig``:
     ├── execution: ExecutionSpec  loop driver / mesh shards / batch / steps /
     │                             Ape-X actor pool / seed
     ├── eval:      EvalSpec       eval cadence + srank instrumentation
-    └── obs:       ObsSpec        in-loop telemetry: metric stream cadence,
-                                  sinks, grad-norm taps, profiler trace
+    ├── obs:       ObsSpec        in-loop telemetry: metric stream cadence,
+    │                             sinks, grad-norm taps, profiler trace
+    └── guard:     GuardSpec      in-loop health guards (repro.guard):
+                                  divergence detection + halt/skip/rollback
 
 Every field is choice-checked at construction and unsupported combinations
 are rejected with actionable messages (``SpecError``) instead of failing
@@ -70,6 +72,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
+from repro.guard.monitor import GuardSpec, GuardViolation, Monitor
 from repro.core.blocks import BLOCK_BACKENDS, CONNECTIVITIES
 from repro.core.effective_rank import effective_rank
 from repro.core.ofenet import OFENetConfig
@@ -126,7 +129,15 @@ def _sub_from_dict(cls, name: str, d: dict):
         warnings.warn(f"ExperimentSpec.from_dict: ignoring unknown "
                       f"{name} keys {unknown} (forward compat)", SpecWarning,
                       stacklevel=3)
-    return cls(**{k: v for k, v in d.items() if k in known})
+    try:
+        return cls(**{k: v for k, v in d.items() if k in known})
+    except SpecError:
+        raise
+    except ValueError as e:
+        # sections defined outside this module (GuardSpec lives in
+        # repro.guard so the guard package never imports repro.rl) raise
+        # plain ValueError — normalize to SpecError for callers
+        raise SpecError(str(e)) from e
 
 
 # --------------------------------------------------------------- sub-specs
@@ -303,7 +314,8 @@ _ALIASES: Dict[str, str] = {
 
 _SECTIONS: Tuple[Tuple[str, type], ...] = (
     ("network", NetworkSpec), ("ofenet", OFENetSpec), ("replay", ReplaySpec),
-    ("execution", ExecutionSpec), ("eval", EvalSpec), ("obs", ObsSpec))
+    ("execution", ExecutionSpec), ("eval", EvalSpec), ("obs", ObsSpec),
+    ("guard", GuardSpec))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -318,6 +330,7 @@ class ExperimentSpec:
         default_factory=ExecutionSpec)
     eval: EvalSpec = dataclasses.field(default_factory=EvalSpec)
     obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
+    guard: GuardSpec = dataclasses.field(default_factory=GuardSpec)
 
     # ------------------------------------------------------- validation
     def __post_init__(self):
@@ -359,6 +372,12 @@ class ExperimentSpec:
                     "the scan superstep's dispatch amortization on the "
                     "mesh. Prefer execution.loop='scan'.", SpecWarning,
                     stacklevel=3)
+        if (self.guard.enabled and self.guard.srank_collapse > 0
+                and not self.eval.srank_every):
+            raise SpecError(
+                "guard.srank_collapse>0 requires eval.srank_every>0: the "
+                "collapse guard watches the effective-rank series, which "
+                "is only measured when srank instrumentation is on.")
         if (self.network.block_backend == "fused" and self.ofenet.enabled
                 and self.ofenet.batch_norm):
             raise SpecError(
@@ -510,6 +529,8 @@ class Experiment:
         self.spec = spec
         self.trainer = Trainer(spec, mesh=mesh)
         self._obs = ObsRun(spec.obs)
+        self._monitor = Monitor(spec.guard) if spec.guard.enabled else None
+        self._guard_store = None       # DurableStore via attach_guard()
         self._ls: Optional[TrainLoopState] = None
         self.step = 0
         self.returns: List[float] = []
@@ -538,24 +559,35 @@ class Experiment:
                 f"({path}.meta.json) — was this saved by Experiment.save?")
         spec = ExperimentSpec.from_dict(meta["spec"])
         exp = cls(spec, mesh=mesh)
-        template = exp.trainer.init_template()
+        exp._load_payload(path, meta)
+        exp._obs.log_event("restore", step=exp.step, path=str(path))
+        exp._obs.drain()
+        return exp
+
+    def _load_payload(self, path: str, meta: dict) -> None:
+        """Load a ``save`` checkpoint's state INTO this handle, replacing
+        whatever it holds (``restore``'s workhorse; also the in-place
+        rollback path of guard policy='rollback', which reuses the live
+        handle's compiled programs instead of rebuilding a Trainer)."""
+        template = self.trainer.init_template()
         tree = ckpt.restore(path, {"loop": _unkey(template)})
-        exp._ls = exp.trainer._pin(_rekey(tree["loop"], template), put=True)
+        self._ls = self.trainer._pin(_rekey(tree["loop"], template),
+                                     put=True)
 
         st = meta["experiment"]
-        exp.step = int(st["step"])
-        exp.returns = [float(r) for r in st["returns"]]
-        exp.eval_steps = [int(s) for s in st["eval_steps"]]
-        exp.sranks = [int(s) for s in st["sranks"]]
-        exp._rows = [dict(r) for r in st.get("rows", [])]
-        exp._last_metrics = dict(st.get("last_metrics", {}))
-        exp._wall = float(st.get("wall_time_s", 0.0))
-        exp.trainer.n_params = int(st["n_params"])
+        self.step = int(st["step"])
+        self.returns = [float(r) for r in st["returns"]]
+        self.eval_steps = [int(s) for s in st["eval_steps"]]
+        self.sranks = [int(s) for s in st["sranks"]]
+        self._rows = [dict(r) for r in st.get("rows", [])]
+        self._last_metrics = dict(st.get("last_metrics", {}))
+        self._wall = float(st.get("wall_time_s", 0.0))
+        self.trainer.n_params = int(st["n_params"])
         # dispatch accounting continues across the resume so
         # metrics["host_dispatches"] matches an uninterrupted run
-        exp.trainer.dispatches = int(st.get("dispatches", 0))
+        self.trainer.dispatches = int(st.get("dispatches", 0))
 
-        buf = exp.trainer.buffer
+        buf = self.trainer.buffer
         if buf is not None:
             inner = getattr(buf, "_inner", buf)
             with np.load(path) as raw:
@@ -568,11 +600,8 @@ class Experiment:
             inner.max_priority = float(b["max_priority"])
             rng = np.random.default_rng()
             rng.bit_generator.state = b["rng_state"]
-            exp.trainer.rng = rng
-        exp._obs.load_state(st.get("obs"))
-        exp._obs.log_event("restore", step=exp.step, path=str(path))
-        exp._obs.drain()
-        return exp
+            self.trainer.rng = rng
+        self._obs.load_state(st.get("obs"))
 
     # ------------------------------------------------------------ running
     def _ensure_init(self):
@@ -615,6 +644,7 @@ class Experiment:
             # body, so any chunking of the same step sequence is bitwise-
             # identical (Trainer.chunk_fn).
             step = start
+            mon = self._monitor
             while step < end:
                 stops = [(step // eval_every + 1) * eval_every, end]
                 if srank_every:
@@ -624,13 +654,25 @@ class Experiment:
                            or (eval_at_end and stop == end))
                 do_srank = bool(srank_every) and stop % srank_every == 0
                 want_last = keep_last and stop == end
+                snap = (self._guard_snapshot(ls, step)
+                        if mon is not None else None)
                 obs.trace.begin()
                 tc = time.time()
                 with annotate("repro.chunk_dispatch"):
                     ls, out = trainer.chunk_fn(stop - step, do_eval,
                                                do_srank)(ls)
-                if "stream" in out:
-                    obs.flush_chunk(step, jax.device_get(out["stream"]))
+                hstream = (jax.device_get(out["stream"])
+                           if "stream" in out else None)
+                if mon is not None:
+                    viol = mon.check_stream(step, hstream) \
+                        if hstream is not None else []
+                    viol += mon.check_params(stop, ls.agent["params"])
+                    if viol:
+                        obs.trace.end()
+                        ls, step = self._guard_recover(viol, snap)
+                        continue
+                if hstream is not None:
+                    obs.flush_chunk(step, hstream)
                     obs.chunk_event(step, stop, time.time() - tc)
                 obs.trace.end()
                 step = stop
@@ -638,6 +680,11 @@ class Experiment:
                     srank = int(out["srank"])
                     self.sranks.append(srank)
                     obs.log_event("srank", step=step, srank=srank)
+                    if mon is not None:
+                        viol = mon.check_srank(step, self.sranks)
+                        if viol:
+                            ls, step = self._guard_recover(viol, snap)
+                            continue
                 if want_last:
                     self._last_batch, self._last_priorities = out["last"]
                 if do_eval:
@@ -647,8 +694,25 @@ class Experiment:
                          for k, v in out["scal"].items()}, progress)
         else:
             metrics = batch = None
-            for step in range(start + 1, end + 1):
+            mon = self._monitor
+            step = start
+            snap = (self._guard_snapshot(ls, step)
+                    if mon is not None else None)
+            while step < end:
+                step += 1
                 ls, metrics, batch = trainer.py_step(ls)
+                if mon is not None:
+                    # per-step checks: the python driver is the debug path,
+                    # so it pays a per-step host sync for exact detection
+                    viol = mon.check_scalars(
+                        step, {k: float(np.asarray(v))
+                               for k, v in metrics.items()
+                               if np.ndim(v) == 0})
+                    viol += mon.check_params(step, ls.agent["params"])
+                    if viol:
+                        ls, step = self._guard_recover(viol, snap)
+                        snap = self._guard_snapshot(ls, step)
+                        continue
                 if obs.enabled and step % obs.log_every == 0:
                     obs.log_train(step, {k: float(np.asarray(v))
                                          for k, v in metrics.items()
@@ -657,6 +721,12 @@ class Experiment:
                     srank = int(effective_rank(metrics["q_features"]))
                     self.sranks.append(srank)
                     obs.log_event("srank", step=step, srank=srank)
+                    if mon is not None:
+                        viol = mon.check_srank(step, self.sranks)
+                        if viol:
+                            ls, step = self._guard_recover(viol, snap)
+                            snap = self._guard_snapshot(ls, step)
+                            continue
                 if (step % eval_every == 0
                         or (eval_at_end and step == end)):
                     key, ke = jax.random.split(ls.key)
@@ -668,6 +738,10 @@ class Experiment:
                         {k: float(np.asarray(v).mean())
                          for k, v in metrics.items()
                          if np.asarray(v).ndim == 0}, progress)
+                    if mon is not None:
+                        # eval points are the segment boundaries the skip
+                        # policy rewinds to
+                        snap = self._guard_snapshot(ls, step)
             if keep_last and metrics is not None:
                 self._last_batch = batch
                 self._last_priorities = metrics["priorities"]
@@ -695,6 +769,116 @@ class Experiment:
         self._obs.log_eval(step, ret, scalars)
         if progress:
             progress(step, ret, scalars)
+
+    # ------------------------------------------------------------- guarding
+    def attach_guard(self, store) -> None:
+        """Attach a ``repro.guard.store.DurableStore``: the checkpoint
+        source for guard policy='rollback' (the supervisor attaches the
+        same store it saves into)."""
+        self._guard_store = store
+
+    def _guard_snapshot(self, ls: TrainLoopState, step: int) -> dict:
+        """Pre-segment snapshot for the skip policy. Device state is free —
+        JAX arrays are immutable, holding the old ``ls`` reference IS the
+        snapshot — so only the host-mutated pieces cost anything: history
+        list lengths, the obs cursor, and (host replay + skip policy only)
+        a copy of the buffer/sum-tree/RNG, taken behind an effects barrier
+        so in-flight io_callbacks can't tear it."""
+        snap = {"ls": ls, "step": step, "obs": self._obs.state(),
+                "hist": (len(self.returns), len(self.eval_steps),
+                         len(self.sranks), len(self._rows))}
+        buf = self.trainer.buffer
+        if buf is not None and self._monitor.spec.policy == "skip":
+            jax.block_until_ready(ls)
+            jax.effects_barrier()
+            inner = getattr(buf, "_inner", buf)
+            snap["buffer"] = {
+                "data": {k: v.copy() for k, v in inner.data.items()},
+                "tree": inner.tree.tree.copy(),
+                "ptr": inner.ptr, "count": inner.count,
+                "max_priority": inner.max_priority,
+                "rng_state": self.trainer.rng.bit_generator.state,
+            }
+        return snap
+
+    def _guard_recover(self, violations, snap) -> Tuple[TrainLoopState, int]:
+        """Apply ``guard.policy`` to a non-empty violation list; returns the
+        (state, step) the driver loop should continue from. Raises
+        ``GuardViolation`` for halt, a spent recovery budget, or an
+        impossible rollback."""
+        mon, obs = self._monitor, self._obs
+        for v in violations:
+            obs.log_event("guard_violation", **v.as_dict())
+        try:
+            if mon.spec.policy == "halt":
+                raise GuardViolation(
+                    f"guard: halt on {violations[0].reason} at step "
+                    f"{violations[0].step}", violations, mon.recoveries)
+            ordinal = mon.spend_recovery(violations)
+            if mon.spec.policy == "skip":
+                ls, step = self._guard_skip(snap, ordinal)
+            else:
+                ls, step = self._guard_rollback(violations, ordinal)
+        except GuardViolation:
+            obs.drain()
+            raise
+        obs.log_event("guard_" + mon.spec.policy, step=step,
+                      recovery=ordinal, detected=violations[0].step,
+                      reason=violations[0].reason)
+        obs.drain()
+        return ls, step
+
+    def _guard_skip(self, snap, ordinal) -> Tuple[TrainLoopState, int]:
+        """Discard the offending segment: rewind to the pre-segment
+        snapshot and fold the recovery ordinal into the PRNG key, so the
+        re-run explores a perturbed trajectory instead of replaying the
+        same divergence."""
+        r0, e0, s0, w0 = snap["hist"]
+        del self.returns[r0:], self.eval_steps[e0:]
+        del self.sranks[s0:], self._rows[w0:]
+        if "buffer" in snap:
+            inner = getattr(self.trainer.buffer, "_inner",
+                            self.trainer.buffer)
+            b = snap["buffer"]
+            for k in inner.data:
+                inner.data[k][...] = b["data"][k]
+            inner.tree.tree[...] = b["tree"]
+            inner.ptr, inner.count = b["ptr"], b["count"]
+            inner.max_priority = b["max_priority"]
+            rng = np.random.default_rng()
+            rng.bit_generator.state = b["rng_state"]
+            self.trainer.rng = rng
+        self._obs.load_state(snap["obs"])
+        ls = snap["ls"]
+        ls = ls._replace(key=jax.random.fold_in(ls.key, ordinal))
+        self._ls = ls
+        return ls, snap["step"]
+
+    def _guard_rollback(self, violations, ordinal) \
+            -> Tuple[TrainLoopState, int]:
+        """Restore the newest GOOD checkpoint from the attached
+        ``DurableStore`` (falling back past corrupt ones) and perturb the
+        key with the recovery ordinal."""
+        store, mon = self._guard_store, self._monitor
+        if store is None:
+            raise GuardViolation(
+                "guard.policy='rollback' needs a DurableStore — call "
+                "Experiment.attach_guard(store) (the supervisor does this "
+                "automatically)", violations, mon.recoveries)
+        path = store.restore_latest(
+            on_bad=lambda bad: self._obs.log_event(
+                "guard_bad_checkpoint", step=self.step,
+                path=str(bad.path), reason=bad.reason))
+        if path is None:
+            raise GuardViolation(
+                f"guard rollback: no good checkpoint in {store.dir}",
+                violations, mon.recoveries)
+        payload = store.payload(path)
+        self._load_payload(payload, ckpt.load_metadata(payload))
+        ls = self._ls._replace(
+            key=jax.random.fold_in(self._ls.key, ordinal))
+        self._ls = ls
+        return ls, self.step
 
     # ------------------------------------------------------------ results
     def metrics(self) -> Iterator[Dict[str, float]]:

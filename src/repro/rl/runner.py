@@ -204,7 +204,13 @@ class Trainer:
         self.warmup_steps = x.warmup_steps
         self.eval_episodes = spec.eval.episodes
         self.srank_every = spec.eval.srank_every
-        self.obs_stream = spec.obs.enabled
+        # the guard consumes the same stacked scalar stream obs does —
+        # emitting it is bitwise-invisible to training (tests/test_obs.py),
+        # so forcing it on for detection keeps guarded == unguarded bitwise.
+        # getattr: bare specs in unit tests may predate the guard section.
+        g = getattr(spec, "guard", None)
+        self.obs_stream = spec.obs.enabled or bool(g is not None
+                                                   and g.enabled)
         self.dispatches = 0
         self._chunks: Dict[tuple, Callable] = {}
         self.env = env = make_env(spec.env)

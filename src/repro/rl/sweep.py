@@ -98,6 +98,8 @@ import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.core.effective_rank import effective_rank
+from repro.guard.monitor import GuardViolation, Monitor
+from repro.guard.store import DurableStore
 from repro.obs.stream import ObsRun
 from repro.obs.trace import annotate
 from repro.rl.envs import eval_returns
@@ -200,6 +202,13 @@ class Fleet:
                 "fleets do not compose with execution.mesh_shards yet: "
                 "the member axis and the mesh 'data' axis would both claim "
                 "the leading dimension. Run mesh-sharded specs solo.")
+        if base.guard.enabled and base.guard.policy == "skip":
+            raise SpecError(
+                "fleets support guard.policy 'halt' or 'rollback', not "
+                "'skip': the skip policy rewinds the pre-segment snapshot, "
+                "which in a fleet would rewind EVERY member (state is one "
+                "stacked tree) — per-member rollback through the durable "
+                "store keeps healthy neighbors bitwise untouched instead.")
         sig0 = _fleet_signature(base)
         for i, s in enumerate(specs[1:], 1):
             diff = _diff_paths(sig0, _fleet_signature(s))
@@ -235,6 +244,14 @@ class Fleet:
         self._last_metrics: List[Dict[str, float]] = [{} for _ in specs]
         self._wall = 0.0
         self._obs = [self._member_obs(label) for label in self.labels]
+        # fleet guard: one Monitor per member for detection state (spike
+        # windows are per-member), one fleet-level Monitor holding the
+        # shared recovery budget
+        g = base.guard
+        self._guard = Monitor(g) if g.enabled else None
+        self._guard_members = [Monitor(g) for _ in specs] if g.enabled \
+            else []
+        self._guard_store = None       # DurableStore via attach_guard()
 
     def _member_obs(self, label: str) -> ObsRun:
         """One ObsRun per member: file sinks write under a per-member
@@ -452,7 +469,10 @@ class Fleet:
                         and bool(self.trainer.srank_every))
             segs.append((stop - s, do_eval, do_srank, s, stop))
             s = stop
-        if stop_at_return is None and segs:
+        # the guard must inspect every segment's outputs on the host before
+        # the next one runs (a rollback swaps member state between
+        # segments), so a guarded fleet always takes the per-segment path
+        if stop_at_return is None and self._guard is None and segs:
             fn = self.fused_fn(len(segs))
             ns = jnp.asarray([g[0] for g in segs], jnp.int32)
             des = jnp.asarray([g[1] for g in segs], bool)
@@ -472,8 +492,13 @@ class Fleet:
                 with annotate("repro.fleet_chunk_dispatch"):
                     self._fls, out = self.chunk_fn(n, de, ds)(
                         self._fls, jnp.asarray(self.done))
+                bad: frozenset = frozenset()
+                if self._guard is not None:
+                    viol = self._guard_check(s0, stop, ds, out)
+                    if viol:
+                        bad = self._guard_recover_members(viol, stop)
                 self._record(out, s0, stop, de, ds, time.time() - tc,
-                             stop_at_return, progress)
+                             stop_at_return, progress, skip=bad)
         self.step = end
         self._wall += time.time() - t0
         for obs in self._obs:
@@ -482,22 +507,25 @@ class Fleet:
         return self.results()
 
     def _record(self, out, s0: int, stop: int, do_eval: bool,
-                do_srank: bool, wall_c: float, stop_at_return, progress):
+                do_srank: bool, wall_c: float, stop_at_return, progress,
+                skip: frozenset = frozenset()):
         """Host epilogue for one segment's outputs: stream flush, srank /
-        eval bookkeeping per active member, early-stop mask updates."""
+        eval bookkeeping per active member, early-stop mask updates.
+        ``skip`` members (just rolled back by the guard) have their
+        segment outputs discarded — they are divergence garbage."""
         if "stream" in out:
             # (cap, M) buffers; only the first stop-s0 rows were written
             stream = {k: np.asarray(v)[:stop - s0]
                       for k, v in jax.device_get(out["stream"]).items()}
             for m, obs in enumerate(self._obs):
-                if self.done[m] or not obs.enabled:
+                if self.done[m] or m in skip or not obs.enabled:
                     continue
                 obs.flush_chunk(s0, {k: v[:, m] for k, v in stream.items()})
                 obs.chunk_event(s0, stop, wall_c)
         if do_srank:
             srank = np.asarray(out["srank"])
             for m in range(self.n_members):
-                if self.done[m]:
+                if self.done[m] or m in skip:
                     continue
                 self.sranks[m].append(int(srank[m]))
                 self._obs[m].log_event("srank", step=stop,
@@ -506,7 +534,7 @@ class Fleet:
             rets = np.asarray(out["eval"])              # (M, episodes)
             scal = {k: np.asarray(v) for k, v in out["scal"].items()}
             for m in range(self.n_members):
-                if self.done[m]:
+                if self.done[m] or m in skip:
                     continue
                 ret = float(rets[m].mean())
                 scalars = {k: float(v[m]) for k, v in scal.items()}
@@ -527,6 +555,95 @@ class Fleet:
                             "early_stop", step=stop,
                             ret=self.returns[m][-1],
                             threshold=float(stop_at_return))
+
+    # ------------------------------------------------------------- guarding
+    def attach_guard(self, store) -> None:
+        """Attach a ``repro.guard.store.DurableStore`` of FLEET checkpoints
+        (``Fleet.save`` payloads) — the rollback source for
+        guard.policy='rollback'."""
+        self._guard_store = store
+
+    def _guard_check(self, s0: int, stop: int, do_srank: bool, out) -> list:
+        """Run per-member health checks over one segment's outputs. Done
+        members are exempt: their carries were frozen at the segment end,
+        so the throwaway outputs vmap computed for them are not theirs."""
+        viol: list = []
+        hstream = (jax.device_get(out["stream"]) if "stream" in out
+                   else None)
+        for m in range(self.n_members):
+            if self.done[m]:
+                continue
+            mm = self._guard_members[m]
+            if hstream is not None:
+                viol += mm.check_stream(
+                    s0, {k: np.asarray(v)[:stop - s0, m]
+                         for k, v in hstream.items()}, member=m)
+            if do_srank and self._guard.spec.srank_collapse:
+                series = self.sranks[m] + [int(np.asarray(out["srank"])[m])]
+                viol += mm.check_srank(stop, series, member=m)
+        viol += [v for v in self._guard.check_member_params(
+                     stop, self._fls.agent["params"])
+                 if not self.done[v.member]]
+        return viol
+
+    def _guard_recover_members(self, violations: list,
+                               stop: int) -> frozenset:
+        """Apply the fleet guard policy: halt raises; rollback restores the
+        violating MEMBERS from the newest good fleet checkpoint through the
+        segment-end ``_tree_where`` select — one leaf-wise where against
+        the restored stacked state — so healthy neighbors' bits are never
+        touched. Rolled-back members get ``fold_in``-perturbed keys and
+        continue with the fleet from their older state (histories keep
+        their real past evals; the rollback is logged per member). Returns
+        the violating member set for ``_record`` to skip."""
+        mon = self._guard
+        for v in violations:
+            d = v.as_dict()
+            m = d.pop("member", 0)
+            self._obs[m].log_event("guard_violation", **d)
+        bad = frozenset(v.member for v in violations)
+        try:
+            if mon.spec.policy == "halt":
+                raise GuardViolation(
+                    f"guard: halt on {violations[0].reason} at step "
+                    f"{violations[0].step} (member(s) {sorted(bad)})",
+                    violations, mon.recoveries)
+            ordinal = mon.spend_recovery(violations)
+            store = self._guard_store
+            if store is None:
+                raise GuardViolation(
+                    "guard.policy='rollback' needs a DurableStore — call "
+                    "Fleet.attach_guard(store) (the supervisor does this "
+                    "automatically)", violations, mon.recoveries)
+            path = store.restore_latest(
+                on_bad=lambda b: self._obs[0].log_event(
+                    "guard_bad_checkpoint", step=stop, path=str(b.path),
+                    reason=b.reason))
+            if path is None:
+                raise GuardViolation(
+                    f"guard rollback: no good checkpoint in {store.dir}",
+                    violations, mon.recoveries)
+        except GuardViolation:
+            for obs in self._obs:
+                obs.drain()
+            raise
+        typed = self._state_template()
+        tree = ckpt.restore(store.payload(path),
+                            {_CKPT_KEY: _unkey_abstract(typed)})
+        good = _rekey(tree[_CKPT_KEY], typed)
+        good = good._replace(key=jax.vmap(
+            lambda k: jax.random.fold_in(k, ordinal))(good.key))
+        mask = np.zeros(self.n_members, bool)
+        mask[sorted(bad)] = True
+        self._fls = _tree_where(jnp.asarray(mask), good, self._fls)
+        from_step = DurableStore.step_of(path)
+        for m in sorted(bad):
+            self._obs[m].log_event(
+                "guard_rollback", step=stop, recovery=ordinal,
+                detected=violations[0].step, rolled_back_to=from_step,
+                reason=violations[0].reason)
+            self._obs[m].drain()
+        return bad
 
     def set_done(self, members, value: bool = True) -> None:
         """Freeze (or unfreeze) members by index list or ``(M,)`` bool

@@ -104,13 +104,15 @@ def test_buffered_writer_fans_out_and_survives_concurrent_drain():
 
 
 class _BoomWriter:
+    # a sink BUG (non-OSError): retried zero times, surfaced at drain.
+    # transient/permanent OSError retry semantics live in test_guard.py
     def __init__(self):
         self.calls = 0
 
     def write(self, rows):
         self.calls += 1
         if self.calls == 1:
-            raise OSError("disk full")
+            raise ValueError("boom: sink bug")
 
     def flush(self):
         pass
@@ -122,7 +124,7 @@ class _BoomWriter:
 def test_buffered_writer_errors_surface_at_drain_not_in_thread():
     bw = BufferedWriter([_BoomWriter()])
     bw.write([{"kind": "train", "step": 1}])
-    with pytest.raises(OSError, match="disk full"):
+    with pytest.raises(ValueError, match="sink bug"):
         bw.drain()
     bw.write([{"kind": "train", "step": 2}])     # writer still usable
     bw.drain()                                   # error was consumed
