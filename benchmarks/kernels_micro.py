@@ -21,7 +21,7 @@ def run(scale: str = "quick"):
     from repro.kernels.dense_block.ops import dense_concat_matmul, fused_dense_padded
     from repro.kernels.dense_block.ref import dense_concat_matmul_ref
     from repro.kernels.flash_attention.ops import gqa_flash
-    from repro.models.attention import plain_attention
+    from repro.kernels.flash_attention.ref import plain_attention
     rows = []
     ks = jax.random.split(jax.random.key(0), 4)
 
@@ -47,7 +47,7 @@ def run(scale: str = "quick"):
                  "us_per_call": t_kernel, "derived": f"maxerr={err:.2e}"})
 
     from repro.kernels.ssd_scan.ops import ssd_chunked_kernel
-    from repro.models.ssm import ssd_chunked
+    from repro.kernels.ssd_scan.ref import ssd_chunked
     B, S, H, P, N = 2, 64, 4, 16, 8
     x = jax.random.normal(ks[0], (B, S, H, P))
     b = jax.random.normal(ks[1], (B, S, N))

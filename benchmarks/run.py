@@ -56,7 +56,6 @@ MODULES = [
     "benchmarks.dense_stack",
     "benchmarks.loop_fusion",
     "benchmarks.sweep_fleet",
-    "benchmarks.lm_substrate",
 ]
 
 # presets_smoke resolves every paper scenario through the preset registry

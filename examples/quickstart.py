@@ -36,6 +36,13 @@ supervisor instead:
         --dir runs/q --retries 3
 
 which survives SIGKILL/OOM bitwise (see ``repro.guard``).
+
+Hacking on the loop itself? The determinism contract (no host impurity in
+traced code, no key reuse, no hidden syncs, one program per chunk
+signature) is gated by ``repro.check``:
+
+    PYTHONPATH=src python -m repro.check lint src
+    PYTHONPATH=src python -m repro.check dynamic --preset smoke
 """
 import argparse
 

@@ -1,0 +1,16 @@
+"""repro.check — static + dynamic gates for the determinism contract.
+
+Two halves, one finding format (:mod:`repro.check.report`):
+
+* ``python -m repro.check lint [paths]`` — AST rules R001-R006 (host
+  impurity in traced code, PRNG key reuse, tracer branching, hidden host
+  syncs, dead modules, unvalidated *Spec fields), diffed against
+  ``check_baseline.json`` so CI fails only on NEW findings.
+* ``python -m repro.check dynamic --preset smoke`` — runs a short preset
+  under ``jax.transfer_guard("disallow")``, asserts the compile-cache
+  footprint matches the chunk-signature bound, and checkifies one
+  superstep for NaN/OOB.
+"""
+from repro.check.report import Finding, RULES, render, to_json
+
+__all__ = ["Finding", "RULES", "render", "to_json"]

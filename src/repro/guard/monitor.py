@@ -78,6 +78,9 @@ class GuardSpec:
         if not isinstance(self.check_params, (bool, np.bool_)):
             raise ValueError(f"guard.check_params={self.check_params!r} "
                              f"must be a bool")
+        if not self.spike_key or not isinstance(self.spike_key, str):
+            raise ValueError(f"guard.spike_key={self.spike_key!r} must be "
+                             f"a non-empty metric-stream key")
         for f in ("spike_factor", "srank_collapse"):
             v = getattr(self, f)
             if not isinstance(v, (int, float)) or isinstance(v, bool) \

@@ -1,6 +1,14 @@
-"""Pure-jnp oracle for the flash attention kernel."""
+"""Pure-jnp oracles for the flash attention kernel.
+
+``attention_ref`` is the (BH, S, d) flat-head oracle the Pallas kernel
+tests diff against; ``plain_attention`` is the grouped-query (B, S, H, hd)
+materialized-scores reference (RoPE-less GQA with sliding window and
+soft-capping) used by tests/test_kernels.py and benchmarks.
+"""
 import jax
 import jax.numpy as jnp
+
+NEG_INF = -2.0e38
 
 
 def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
@@ -20,3 +28,34 @@ def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
     s = jnp.where(ok, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _softcap(s, cap):
+    return cap * jnp.tanh(s / cap) if cap else s
+
+
+def plain_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window=None,
+                    attn_cap: float = 0.0, q_offset: int = 0) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Skv,KV,hd). Returns (B,Sq,H,hd_v)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _softcap(s, attn_cap)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(k.shape[1])
+    qp = q_pos[:, None]
+    kp = kv_pos[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= qp - kp < window
+    s = s + jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)

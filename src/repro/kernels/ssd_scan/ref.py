@@ -1,4 +1,14 @@
-"""Pure-jnp oracle for the SSD intra-chunk dual-form kernel."""
+"""Pure-jnp oracles for the SSD scan kernels.
+
+``ssd_chunk_dual_ref`` is the float64 numpy oracle for the intra-chunk
+dual-form Pallas kernel; ``ssd_chunked`` is the full chunked SSD scan
+(intra-chunk dual form + inter-chunk ``lax.scan``) in plain jnp — the
+whole-sequence reference the kernel path is diffed against in
+tests/test_kernels.py.
+"""
+from typing import Optional, Tuple
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -23,3 +33,71 @@ def ssd_chunk_dual_ref(c, b, x, cum, dt, state_in, d_skip):
                 + np.exp(cum[g, h])[:, None] * (c[g] @ state_in[g, h].T) \
                 + d_skip[h] * x[g, h]
     return y
+
+
+def ssd_chunked(x: jax.Array, b: jax.Array, c: jax.Array, dt: jax.Array,
+                log_a: jax.Array, *, chunk: int,
+                init_state: Optional[jax.Array] = None, unroll: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) head inputs; b,c: (B,S,N) (shared across heads, 1 group);
+    dt: (B,S,H) positive step sizes; log_a: (H,) positive decay rates.
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    B, S, H, Pd = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    a = jnp.exp(log_a.astype(jnp.float32))                    # (H,)
+    dt = dt.astype(jnp.float32)
+    # per-step log decay  log g_t = -dt_t * a_h   (<= 0)
+    lg = (-dt * a).reshape(B, nc, chunk, H)
+    xs = x.reshape(B, nc, chunk, H, Pd)
+    bs = b.reshape(B, nc, chunk, N).astype(jnp.float32)
+    cs = c.reshape(B, nc, chunk, N).astype(jnp.float32)
+    dts = dt.reshape(B, nc, chunk, H)
+
+    cum = jnp.cumsum(lg, axis=2)                              # (B,nc,Q,H)
+    total = cum[:, :, -1:, :]                                 # chunk decay
+
+    # intra-chunk (dual form): M[t,s] = exp(cum_t - cum_s) * dt_s * (c_t . b_s)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: grad of where(mask, exp(x), 0) is NaN where exp
+    # overflows; exp(-inf)=0 has a clean zero gradient.
+    rel = jnp.where(tri[None, None, :, :, None], rel, -jnp.inf)
+    gmat = jnp.exp(rel)
+    scores = jnp.einsum("bntk,bnsk->bnts", cs, bs)            # (B,nc,Q,Q)
+    m = scores[..., None] * gmat * dts[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bntsh,bnshp->bnthp",
+                         m, xs.astype(jnp.float32))
+
+    # chunk-input states: state contribution of each chunk
+    # state_n = sum_s exp(total - cum_s) dt_s b_s x_s^T
+    w = jnp.exp(total - cum) * dts                            # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bnsh,bnsk,bnshp->bnhpk",
+                             w, bs, xs.astype(jnp.float32))   # (B,nc,H,P,N)
+
+    # inter-chunk: scan carried state across chunks
+    decay_chunk = jnp.exp(total[:, :, 0, :])                  # (B,nc,H)
+
+    def step(state, inp):
+        dc, cst = inp                                         # (B,H), (B,H,P,N)
+        prev = state
+        new = prev * dc[:, :, None, None] + cst
+        return new, prev                                      # emit state BEFORE chunk
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, Pd, N), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init_state,
+        (decay_chunk.transpose(1, 0, 2), chunk_state.transpose(1, 0, 2, 3, 4)),
+        unroll=nc if unroll else 1)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,nc,H,P,N)
+
+    # inter-chunk output: y_t += exp(cum_t) * C_t . state_prev
+    y_inter = jnp.einsum("bnth,bntk,bnhpk->bnthp",
+                         jnp.exp(cum), cs, prev_states)
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y.astype(x.dtype), final

@@ -118,6 +118,39 @@ the budget is spent. Every recovery path is exercised by deterministic
 fault injection (``repro.guard.chaos``, the supervisor's ``--chaos``
 flag, tests/test_guard.py).
 
+Correctness tooling (``repro.check``): the determinism contract above —
+no host impurity inside traced code, no PRNG key reuse, no hidden
+host<->device syncs in the superstep, one compiled program per chunk
+signature — is enforced by a two-part gate. The static half::
+
+    python -m repro.check lint src
+
+runs JAX-aware AST rules: **R001** host-impure calls (``time.time``,
+``np.random.*``, ``uuid`` ...) reachable from jitted/scanned/vmapped
+functions (their value bakes into the compiled program at trace time);
+**R002** a PRNG key consumed by two ``jax.random.*`` calls without an
+intervening ``split``/``fold_in`` rebind (correlated randomness); **R003**
+Python ``if``/``while``/``assert`` on tracer values in traced scopes
+(trace-time crash or hidden sync); **R004** ``.item()`` / ``float()`` /
+``np.asarray`` on device values inside loop-body modules — fetch at the
+chunk epilogue with explicit ``jax.device_get`` instead; **R005** modules
+unreachable from any entrypoint; **R006** ``*Spec`` dataclass fields not
+covered by ``validate``/``__post_init__``. Findings are diffed against the
+checked-in ``check_baseline.json`` (every grandfathered entry needs a
+``reason``), so CI fails only on NEW findings; a justified exception is
+silenced inline with ``# check: disable=R00x -- why this is safe`` (the
+reason is mandatory — omitting it is itself a finding). The dynamic half::
+
+    python -m repro.check dynamic --preset smoke
+
+executes a tiny run, then replays the same schedule under
+``jax.transfer_guard("disallow")`` (any implicit transfer in the steady
+state raises — D001), asserts the compile cache exactly matches the chunk
+signatures the scheduler predicts, with zero recompiles on the second pass
+(D002), and re-traces one superstep under ``checkify`` NaN/OOB checks
+(D003). Both halves run in CI; rules and fixtures live in
+``tests/test_check.py``.
+
 Presets (``repro.rl.presets``): every paper scenario by name —
 ``fig1-depth``, ``fig3-width``, ``fig4-grid``, ``fig5-connectivity``,
 ``fig6-ofenet``, ``fig8-distributed``, ``fig10-ablation``,

@@ -39,6 +39,20 @@ class EnvSpec:
     step: Callable
     obs: Callable
 
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError(f"env name={self.name!r} must be a non-empty "
+                             f"string")
+        for field in ("obs_dim", "act_dim", "max_episode_steps"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or v <= 0:
+                raise ValueError(f"env {self.name}: {field}={v!r} must be "
+                                 f"a positive int")
+        for field in ("reset", "step", "obs"):
+            if not callable(getattr(self, field)):
+                raise ValueError(f"env {self.name}: {field} must be "
+                                 f"callable")
+
 
 def _mk_state(key, q, qd):
     return EnvState(q=q, qd=qd, t=jnp.int32(0), key=key)

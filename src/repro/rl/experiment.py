@@ -219,6 +219,7 @@ class ExecutionSpec:
         _positive("execution", "warmup_steps", self.warmup_steps, minimum=0)
         _positive("execution", "n_core", self.n_core)
         _positive("execution", "n_env", self.n_env)
+        _positive("execution", "seed", self.seed, minimum=0)
 
     @property
     def n_actors(self) -> int:
@@ -677,7 +678,11 @@ class Experiment:
                 obs.trace.end()
                 step = stop
                 if do_srank:
-                    srank = int(out["srank"])
+                    # explicit device_get: the chunk epilogue is the ONE
+                    # sanctioned host<->device barrier in the scan driver,
+                    # so the steady state stays clean under
+                    # jax.transfer_guard("disallow") (repro.check dynamic)
+                    srank = int(jax.device_get(out["srank"]))
                     self.sranks.append(srank)
                     obs.log_event("srank", step=step, srank=srank)
                     if mon is not None:
@@ -688,10 +693,11 @@ class Experiment:
                 if want_last:
                     self._last_batch, self._last_priorities = out["last"]
                 if do_eval:
+                    ev_ret, scal = jax.device_get((out["eval"],
+                                                   out["scal"]))
                     self._record_eval(
-                        step, float(np.mean(np.asarray(out["eval"]))),
-                        {k: float(np.asarray(v))
-                         for k, v in out["scal"].items()}, progress)
+                        step, float(np.mean(ev_ret)),
+                        {k: float(v) for k, v in scal.items()}, progress)
         else:
             metrics = batch = None
             mon = self._monitor

@@ -1,4 +1,4 @@
-"""Paper-scenario preset registry (modeled on ``repro.configs.registry``).
+"""Paper-scenario preset registry.
 
 Every paper figure/table scenario is a named ``ExperimentSpec`` so drivers
 stop hand-building configs: ``presets.get("fig5-connectivity")`` returns the

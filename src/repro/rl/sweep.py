@@ -449,6 +449,9 @@ class Fleet:
         the done mask must react to each eval on the host, so the run
         falls back to one dispatch per segment. Both paths execute the
         same segment bodies in the same order. Returns ``results()``."""
+        # host-side driver timing only: every time.time() below runs
+        # between device dispatches, never inside a traced scope, so wall
+        # clocks cannot leak into a compiled program (R001's failure mode)
         t0 = time.time()
         ev = self.spec.eval
         eval_every, srank_every = ev.every, ev.srank_every
@@ -523,7 +526,9 @@ class Fleet:
                 obs.flush_chunk(s0, {k: v[:, m] for k, v in stream.items()})
                 obs.chunk_event(s0, stop, wall_c)
         if do_srank:
-            srank = np.asarray(out["srank"])
+            # explicit epilogue barrier (transfer-guard clean, like the
+            # solo driver in experiment.py)
+            srank = jax.device_get(out["srank"])
             for m in range(self.n_members):
                 if self.done[m] or m in skip:
                     continue
@@ -531,8 +536,8 @@ class Fleet:
                 self._obs[m].log_event("srank", step=stop,
                                        srank=int(srank[m]))
         if do_eval:
-            rets = np.asarray(out["eval"])              # (M, episodes)
-            scal = {k: np.asarray(v) for k, v in out["scal"].items()}
+            rets, scal = jax.device_get((out["eval"], out["scal"]))
+            rets = np.asarray(rets)                     # (M, episodes)
             for m in range(self.n_members):
                 if self.done[m] or m in skip:
                     continue

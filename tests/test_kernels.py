@@ -21,7 +21,7 @@ from repro.kernels.replay_tree.replay_tree import (tree_sample, tree_set,
 from repro.kernels.ssd_scan.ops import ssd_chunked_kernel
 from repro.kernels.ssd_scan.ssd_scan import ssd_chunk_dual
 from repro.kernels.ssd_scan.ref import ssd_chunk_dual_ref
-from repro.models.ssm import ssd_chunked
+from repro.kernels.ssd_scan.ref import ssd_chunked
 
 
 def _tol(dtype):
@@ -114,7 +114,7 @@ def test_flash_attention_softcap_gemma2():
 
 
 def test_gqa_flash_wrapper_matches_model_attention():
-    from repro.models.attention import plain_attention
+    from repro.kernels.flash_attention.ref import plain_attention
     ks = jax.random.split(jax.random.key(7), 3)
     B, S, H, KV, hd = 2, 128, 8, 2, 32
     q = jax.random.normal(ks[0], (B, S, H, hd))
