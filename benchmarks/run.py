@@ -56,13 +56,14 @@ MODULES = [
     "benchmarks.dense_stack",
     "benchmarks.loop_fusion",
     "benchmarks.sweep_fleet",
+    "benchmarks.serve_policy",
 ]
 
 # presets_smoke resolves every paper scenario through the preset registry
 # (construct + validate + build the Experiment, no jit) before the
 # kernel/loop one-rep runs
 SMOKE_MODULES = ["benchmarks.presets_smoke", "benchmarks.dense_stack",
-                 "benchmarks.loop_fusion"]
+                 "benchmarks.loop_fusion", "benchmarks.serve_policy"]
 
 
 def _merge_write(path: Path, rows) -> None:

@@ -175,11 +175,22 @@ def _imports_of(tree: ast.Module, self_name: str) -> Set[str]:
     return out
 
 
+# CLI modules invoked as `python -m repro.<...>` (the command surface CI
+# and the docs advertise) — entrypoints for R005 even if their inline
+# `if __name__ == "__main__"` block ever moves behind a console script
+M_ENTRYPOINTS = (
+    "src/repro/launch/serve_policy.py",
+    "src/repro/guard/supervise.py",
+    "src/repro/obs/report.py",
+)
+
+
 def r005_dead_modules(files: Dict[str, str], root: str) -> List[Finding]:
     """Files unreachable from any entrypoint via the import graph.
 
     Entrypoints: tests/, benchmarks/, examples/, conftest.py, the rl/
-    package (the public API), ``__main__.py`` files, and any file with an
+    package (the public API), ``__main__.py`` files, the ``-m`` CLI
+    modules in ``M_ENTRYPOINTS``, and any file with an
     ``if __name__ == "__main__"`` block. Namespace packages (no
     __init__.py) resolve fine because matching is by module NAME prefix.
     """
@@ -200,7 +211,7 @@ def r005_dead_modules(files: Dict[str, str], root: str) -> List[Finding]:
             return True
         if rel.endswith(("conftest.py", "__main__.py")):
             return True
-        if rel.startswith("src/repro/rl/"):
+        if rel.startswith("src/repro/rl/") or rel in M_ENTRYPOINTS:
             return True
         for node in tree.body:
             if isinstance(node, ast.If):

@@ -24,6 +24,10 @@ Faults:
 * ``arm_kill_mid_save(store)`` — SIGKILL at the store's pre-commit seam:
   every checkpoint file staged and checksummed, the commit rename never
   happens. ``restore_latest`` must land on the previous good checkpoint.
+* ``arm_swap_fault(server, fires=N)`` — die at the policy server's
+  pre-flip seam: new params staged, the generation flip never happens.
+  Serving must continue on the OLD generation with zero dropped or
+  mixed-generation responses (the hot-swap analogue of kill-mid-save).
 * ``corrupt_checkpoint(path, mode)`` — bit-flip or truncate a COMMITTED
   checkpoint's payload without touching its manifest, so only checksum
   verification can catch it.
@@ -136,6 +140,42 @@ def arm_kill_mid_save(store) -> None:
     garbage (``clean_staging`` removes it); the previous committed
     checkpoint must remain the restore target."""
     store._pre_commit_hook = lambda staging: kill_now()
+
+
+def arm_swap_fault(server, fires: int = 1) -> "OneShotN":
+    """Fault the serving engine's param hot-swap at its worst moment: new
+    params fully staged (shadow buffer materialized), one pointer flip
+    short of adoption. The first ``fires`` flips die mid-swap; the server
+    must keep serving the OLD generation — never a half-adopted policy,
+    never a mixed-generation response — and a re-push must succeed once
+    the fault heals. Returns the latch (``latch.count`` = faults fired)."""
+    latch = OneShotN(fires)
+
+    def hook(generation: int) -> None:
+        if latch.fire():
+            raise RuntimeError(
+                f"chaos: swap fault mid-flip (generation {generation})")
+
+    server._pre_flip_hook = hook
+    return latch
+
+
+class OneShotN:
+    """In-process latch firing at most ``n`` times (thread-safe — the
+    serving batcher trips it from its own thread)."""
+
+    def __init__(self, n: int):
+        import threading
+        self.n = n
+        self.count = 0
+        self._lock = threading.Lock()
+
+    def fire(self) -> bool:
+        with self._lock:
+            if self.count >= self.n:
+                return False
+            self.count += 1
+            return True
 
 
 # --------------------------------------------------------- stored-state rot

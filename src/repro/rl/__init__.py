@@ -151,6 +151,39 @@ signatures the scheduler predicts, with zero recompiles on the second pass
 (D003). Both halves run in CI; rules and fixtures live in
 ``tests/test_check.py``.
 
+Serving (``repro.rl.policy`` + ``repro.launch.serve_policy``): ONE
+inference surface turns params into actions everywhere — collection,
+eval and live traffic::
+
+    from repro.rl import Policy
+
+    pol = Policy.from_checkpoint("run.npz")   # agent/params subtree only
+    a = pol.act_deterministic(obs)            # single obs or batch
+    pol = exp.policy()                        # or: from a live Experiment
+
+``Policy`` binds the algorithm's pure act/det functions (SAC
+tanh-Gaussian sample / mean action, TD3 policy (+ exploration noise)) to
+concrete params, batches single observations, and jit-caches per
+(batch_shape, dtype) in a core SHARED across ``with_params`` rebinds —
+swapping parameters never recompiles, which is the hot-swap contract the
+serving engine builds on. ``envs.eval_returns`` consumes a ``Policy``
+directly, so eval is just another policy client and is bitwise-identical
+to the pre-refactor inlined closures (tests/test_policy.py pins the
+matrix). For live traffic::
+
+    python -m repro.launch.serve_policy smoke --ckpt-dir runs/x/ckpts
+
+runs the continuous-batching server: a bounded request queue, a batcher
+that coalesces up to ``max_batch`` requests (or ``max_wait_ms``) into
+fixed padded batch slots (compile cache pinned to the slot set, like the
+trainer's chunk signatures), ONE jitted ``act_deterministic`` per tick,
+and a response demux. A watcher thread polls a ``repro.guard``
+``DurableStore`` for new VERIFIED checkpoints and double-buffers the
+param swap — restore into a shadow buffer, flip a generation pointer
+between ticks — so a live learner (or ``repro.guard.supervise``) pushes
+checkpoints without pausing serving and no response ever mixes param
+generations. Throughput/latency: ``benchmarks/serve_policy.py``.
+
 Presets (``repro.rl.presets``): every paper scenario by name —
 ``fig1-depth``, ``fig3-width``, ``fig4-grid``, ``fig5-connectivity``,
 ``fig6-ofenet``, ``fig8-distributed``, ``fig10-ablation``,
@@ -162,7 +195,9 @@ The flat ``RunConfig`` + one-shot ``run_training`` are gone: their
 deprecation period ended and both names now raise ``RuntimeError`` with a
 porting recipe (every flat field still works as an ``override`` alias).
 """
-from repro.rl.envs import ENVS, EnvSpec, make_env, rollout_return
+from repro.rl.envs import ENVS, EnvSpec, eval_returns, make_env, \
+    rollout_return
+from repro.rl.policy import Policy
 from repro.rl.runner import RunConfig, RunResult, run_training
 from repro.rl.experiment import (EvalSpec, ExecutionSpec, Experiment,
                                  ExperimentSpec, NetworkSpec, ObsSpec,

@@ -259,15 +259,20 @@ def make_env(name: str) -> EnvSpec:
     return ENVS[name]()
 
 
-def rollout_return(env: EnvSpec, policy_fn, key: jax.Array,
+def rollout_return(env: EnvSpec, policy, key: jax.Array,
                    steps: int = 0) -> jax.Array:
-    """Deterministic-policy episode return (jitted evaluation loop)."""
+    """Deterministic-policy episode return (jitted evaluation loop).
+
+    ``policy`` is a ``repro.rl.Policy`` handle (its ``act_deterministic``
+    is used) or a bare ``obs -> action`` callable.
+    """
     steps = steps or env.max_episode_steps
     s = env.reset(key)
+    act = getattr(policy, "act_deterministic", policy)
 
     def body(carry, _):
         s, total = carry
-        a = policy_fn(env.obs(s))
+        a = act(env.obs(s))
         s, _, r, _ = env.step(s, a)
         return (s, total + r), None
 
@@ -276,19 +281,20 @@ def rollout_return(env: EnvSpec, policy_fn, key: jax.Array,
     return total
 
 
-def eval_returns(env: EnvSpec, policy_fn, params, key: jax.Array,
+def eval_returns(env: EnvSpec, policy, key: jax.Array,
                  episodes: int) -> jax.Array:
     """Per-episode deterministic-policy returns as ONE traceable program.
 
-    ``policy_fn(params, obs_batch) -> action_batch`` (the runner's mean
-    policy). All ``episodes`` rollouts run as a vmapped ``lax.scan``, so a
-    whole evaluation point costs a single host dispatch — and the scanned
-    training superstep can fold it into the same jitted chunk. Episode keys
-    are ``fold_in(key, i)``, matching the legacy per-episode loop.
+    ``policy`` is a params-bound ``repro.rl.Policy`` (eval is just another
+    policy client). All ``episodes`` rollouts run as a vmapped
+    ``lax.scan``, so a whole evaluation point costs a single host
+    dispatch — and the scanned training superstep can fold it into the
+    same jitted chunk. Episode keys are ``fold_in(key, i)``, matching the
+    legacy per-episode loop; a single observation batches through the
+    network exactly as before (``obs[None] -> action[0]``, inside
+    ``Policy.act_deterministic``).
     """
     def one(i):
-        return rollout_return(env,
-                              lambda o: policy_fn(params, o[None])[0],
-                              jax.random.fold_in(key, i))
+        return rollout_return(env, policy, jax.random.fold_in(key, i))
 
     return jax.vmap(one)(jnp.arange(episodes))

@@ -902,6 +902,14 @@ class Experiment:
         """Stop a still-active profiler capture and close the obs sinks."""
         self._obs.close()
 
+    def policy(self) -> "Policy":
+        """The run's current inference handle (``repro.rl.Policy``) —
+        deterministic eval/serving actions via ``act_deterministic``,
+        stochastic collection actions via ``act``. Initializes the run
+        state on first use; shares the Trainer's compile cache."""
+        from repro.rl.policy import Policy
+        return Policy.from_experiment(self)
+
     def result(self, *, include_state: bool = False) -> RunResult:
         """The cumulative RunResult snapshot (shape-compatible with the
         legacy ``run_training`` return)."""

@@ -1,0 +1,292 @@
+"""Unified actor-inference surface: ONE way to turn params into actions.
+
+Before this module the actor-inference path existed four times as
+duck-typed closures inside ``rl/runner.py`` (train/eval x SAC/TD3) and was
+threaded separately through ``envs.eval_returns``'s ``policy_fn`` argument
+and ``rl/sweep.py`` — no single place to batch, jit-cache or hot-swap. Now
+every consumer of "params -> action" goes through here:
+
+* ``policy_fns(algo, acfg)`` — the two pure functions per algorithm:
+  ``act(params, obs, key)`` (stochastic, for collection: SAC tanh-Gaussian
+  sample / TD3 policy + clipped exploration noise) and
+  ``det(params, obs)`` (deterministic, for eval and serving: SAC mean
+  action / TD3 policy). These are the exact ops the runner's deleted
+  closures ran, so routing collect/eval through them is bitwise-invisible
+  to training (tests/test_policy.py pins this).
+* ``Policy`` — a handle binding those functions to concrete ``params``.
+  Registered as a pytree (params are the children, everything else is
+  static), so a ``Policy`` flows through ``jit``/``vmap``/``lax.scan``:
+  the training chunk evaluates through ``policy.with_params(traced)`` and
+  the serving engine calls the same handle from host threads. Host-side
+  calls dispatch through a per-function ``jax.jit`` wrapper — compile
+  cache keyed by (batch_shape, dtype), shared across ``with_params``
+  copies, so swapping parameters NEVER recompiles (the serving hot-swap
+  contract; ``Policy.compile_counts`` exposes the cache sizes).
+* ``Policy.from_experiment`` / ``Policy.from_checkpoint`` — build a
+  serving handle from a live run or from ``Experiment.save`` output.
+  ``from_checkpoint`` restores ONLY the ``agent/params`` subtree through
+  ``checkpoint/ckpt.py`` (template via ``jax.eval_shape`` over the
+  algorithm init — no throwaway training state, no warmup program).
+
+The continuous-batching policy server (``repro.launch.serve_policy``)
+builds on this handle; ``envs.eval_returns`` consumes it directly — eval
+is just another policy client.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ofenet import OFENetConfig
+from repro.rl import sac as sac_mod, td3 as td3_mod
+
+
+def algo_config(spec, env):
+    """The algorithm config (``SACConfig``/``TD3Config``) for a duck-typed
+    ``ExperimentSpec`` + built env — the single source of the config
+    wiring the Trainer and every serving/eval client share."""
+    ofe_cfg: Optional[OFENetConfig] = None
+    if spec.ofenet.enabled:
+        ofe_cfg = spec.ofenet_config(env.obs_dim, env.act_dim)
+    n = spec.network
+    common = dict(obs_dim=env.obs_dim, act_dim=env.act_dim,
+                  num_units=n.num_units, num_layers=n.num_layers,
+                  connectivity=n.connectivity, activation=n.activation,
+                  block_backend=n.block_backend, ofenet=ofe_cfg,
+                  grad_norms=spec.obs.enabled and spec.obs.grad_norms)
+    cls = sac_mod.SACConfig if spec.algo == "sac" else td3_mod.TD3Config
+    return cls(**common)
+
+
+def policy_fns(algo: str, acfg) -> Tuple[Callable, Callable]:
+    """``(act(params, obs, key), det(params, obs))`` for one algorithm.
+
+    ``act`` is the collection policy (stochastic), ``det`` the eval/serving
+    policy (deterministic). Both take a BATCH of observations. These are
+    the verbatim ops of the former per-algo runner closures — the training
+    loop and the eval path run through them unchanged, bitwise."""
+    if algo == "sac":
+        def act(params, obs, key):
+            a, _ = sac_mod.sample_action(params, acfg, obs, key)
+            return a
+
+        def det(params, obs):
+            return sac_mod.mean_action(params, acfg, obs)
+        return act, det
+    if algo == "td3":
+        def act(params, obs, key):
+            a = td3_mod.policy(params, acfg, obs)
+            return jnp.clip(
+                a + acfg.expl_noise * jax.random.normal(key, a.shape),
+                -1, 1)
+
+        def det(params, obs):
+            return td3_mod.policy(params, acfg, obs)
+        return act, det
+    raise ValueError(f"unknown algo {algo!r}")
+
+
+def _any_tracer(*trees) -> bool:
+    """True when any leaf is a JAX tracer — i.e. we are inside a traced
+    context and must inline the raw function instead of calling a jitted
+    wrapper (a nested jit boundary could change fusion, breaking the
+    bitwise-parity contract with the pre-refactor inlined closures)."""
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if isinstance(leaf, jax.core.Tracer):
+                return True
+    return False
+
+
+class _PolicyCore:
+    """The params-independent half of a ``Policy``: algo config, the pure
+    act/det functions, and their SHARED jit wrappers. ``with_params``
+    copies reference one core, so every generation of a hot-swapped
+    serving policy hits the same compile cache."""
+
+    def __init__(self, algo: str, acfg, env_name: str = ""):
+        self.algo = algo
+        self.acfg = acfg
+        self.env_name = env_name
+        self.obs_dim = acfg.obs_dim
+        self.act_dim = acfg.act_dim
+        self.act, self.det = policy_fns(algo, acfg)
+        self.act_j = jax.jit(self.act)
+        self.det_j = jax.jit(self.det)
+
+
+@jax.tree_util.register_pytree_node_class
+class Policy:
+    """``params`` bound to one algorithm's act/det functions.
+
+    >>> pol = Policy.from_checkpoint("run.npz")
+    >>> a = pol.act_deterministic(obs)            # single obs or batch
+    >>> a = pol.act(obs, jax.random.key(0))       # stochastic (collect)
+
+    Single observations (``(obs_dim,)``) are batched through the network
+    exactly as the legacy eval path did (``obs[None] -> action[0]``);
+    batches pass through unchanged. Host-side calls go through a jitted
+    wrapper cached per (batch_shape, dtype) in the shared core; calls from
+    inside a trace (the training chunk's folded eval) inline the raw
+    function so the compiled training program is identical to the
+    pre-refactor one.
+
+    A ``Policy`` is a pytree whose only children are ``params`` — it can
+    be passed through ``jit``/``vmap`` and rebound with ``with_params``
+    (cheap; shares the core and its compile cache).
+    """
+
+    def __init__(self, core: _PolicyCore, params: Any):
+        self._core = core
+        self.params = params
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return (self.params,), self._core
+
+    @classmethod
+    def tree_unflatten(cls, core, children):
+        return cls(core, children[0])
+
+    # -------------------------------------------------------- constructors
+    @classmethod
+    def from_algo(cls, algo: str, acfg, params=None,
+                  env_name: str = "") -> "Policy":
+        """A handle from an already-built algorithm config (the Trainer's
+        path — it shares its ``acfg`` with the policy core)."""
+        return cls(_PolicyCore(algo, acfg, env_name), params)
+
+    @classmethod
+    def from_spec(cls, spec, params=None, *, env=None) -> "Policy":
+        """A handle for ``spec``'s algorithm/network, optionally bound to
+        ``params`` (bind later with ``with_params``)."""
+        from repro.rl.envs import make_env
+        env = env if env is not None else make_env(spec.env)
+        return cls(_PolicyCore(spec.algo, algo_config(spec, env), spec.env),
+                   params)
+
+    @classmethod
+    def from_experiment(cls, exp) -> "Policy":
+        """The live ``Experiment``'s current policy (initializing the run
+        state if needed) — shares the Trainer's core, so serving a training
+        run adds no compile cache of its own."""
+        exp._ensure_init()
+        return exp.trainer.policy(exp._ls.agent["params"])
+
+    @classmethod
+    def from_checkpoint(cls, path: str) -> "Policy":
+        """A serving handle from ``Experiment.save`` output: spec from the
+        checkpoint metadata, ONLY the ``agent/params`` subtree restored."""
+        spec, params = load_params(path)
+        return cls.from_spec(spec, params)
+
+    def with_params(self, params) -> "Policy":
+        """Same functions, new parameters (shares the compile cache)."""
+        return Policy(self._core, params)
+
+    # ------------------------------------------------------------- acting
+    def _batched(self, obs):
+        if not isinstance(obs, jax.core.Tracer):
+            obs = jnp.asarray(obs)
+        if obs.ndim == 1:
+            return obs[None], True
+        return obs, False
+
+    def _require_params(self):
+        if self.params is None:
+            raise ValueError(
+                "Policy has no params bound — build it with "
+                "from_checkpoint/from_experiment or call with_params()")
+
+    def act(self, obs, key) -> jax.Array:
+        """Stochastic action(s) for collection: SAC tanh-Gaussian sample /
+        TD3 policy + clipped exploration noise."""
+        self._require_params()
+        ob, single = self._batched(obs)
+        fn = (self._core.act if _any_tracer(ob, self.params, key)
+              else self._core.act_j)
+        a = fn(self.params, ob, key)
+        return a[0] if single else a
+
+    def act_deterministic(self, obs) -> jax.Array:
+        """Deterministic action(s) for evaluation and serving."""
+        self._require_params()
+        ob, single = self._batched(obs)
+        fn = (self._core.det if _any_tracer(ob, self.params)
+              else self._core.det_j)
+        a = fn(self.params, ob)
+        return a[0] if single else a
+
+    # ------------------------------------------------------- introspection
+    @property
+    def act_fn(self) -> Callable:
+        """The raw ``act(params, obs_batch, key)`` pure function — the
+        training superstep's collection policy (traced, not jitted here)."""
+        return self._core.act
+
+    @property
+    def det_fn(self) -> Callable:
+        """The raw ``det(params, obs_batch)`` pure function."""
+        return self._core.det
+
+    @property
+    def algo(self) -> str:
+        return self._core.algo
+
+    @property
+    def acfg(self):
+        return self._core.acfg
+
+    @property
+    def obs_dim(self) -> int:
+        return self._core.obs_dim
+
+    @property
+    def act_dim(self) -> int:
+        return self._core.act_dim
+
+    @property
+    def compile_counts(self) -> Dict[str, int]:
+        """Compiled-signature counts of the shared jit wrappers — the
+        serving tests pin these to the batch-slot set (no per-batch-size
+        recompiles, no recompiles on param hot-swap)."""
+        return {"act": self._core.act_j._cache_size(),
+                "det": self._core.det_j._cache_size()}
+
+
+def load_params(path: str, spec=None) -> Tuple[Any, Any]:
+    """``(spec, agent_params)`` from an ``Experiment.save`` checkpoint.
+
+    Restores ONLY the ``loop/agent/params`` leaves: the restore template
+    is built abstractly with ``jax.eval_shape`` over the algorithm init,
+    so no training state is materialized and no warmup program runs —
+    this is the serving hot-swap path, polled by the checkpoint watcher.
+    Pass ``spec`` to skip re-parsing the checkpoint metadata (the watcher
+    reuses the spec across polls; the payload must match it)."""
+    # local import: repro.rl.experiment imports the runner, which imports
+    # this module — resolving the spec lazily keeps the layering acyclic
+    from repro.checkpoint import ckpt
+    from repro.rl.envs import make_env
+
+    if spec is None:
+        from repro.rl.experiment import ExperimentSpec
+        meta = ckpt.load_metadata(path)
+        if meta is None or "spec" not in meta:
+            raise FileNotFoundError(
+                f"{path}: no spec-bearing checkpoint metadata — was this "
+                f"saved by Experiment.save?")
+        spec = ExperimentSpec.from_dict(meta["spec"])
+    env = make_env(spec.env)
+    acfg = algo_config(spec, env)
+    init = sac_mod.sac_init if spec.algo == "sac" else td3_mod.td3_init
+    state_t = jax.eval_shape(lambda k: init(k, acfg), jax.random.key(0))
+    # the checkpoint flattens TrainLoopState with attribute paths
+    # (`loop/.agent/...`) — a namedtuple wrapper makes the subtree
+    # template render the same leaf keys as the full saved state
+    loop_t = collections.namedtuple("_LoopTemplate", ["agent"])
+    tree = ckpt.restore(path, {"loop": loop_t(
+        agent={"params": state_t["params"]})})
+    return spec, tree["loop"].agent["params"]

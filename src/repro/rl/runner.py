@@ -66,7 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, List, NamedTuple, Optional
+from typing import Any, Callable, Dict, List, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -76,13 +76,13 @@ from jax.experimental import io_callback
 from repro.common import tree_size
 from repro.core.effective_rank import effective_rank
 from repro.obs.trace import annotate
-from repro.core.ofenet import OFENetConfig
 from repro.launch.mesh import make_actor_mesh, replay_shards
 from repro.replay import (DeviceReplayConfig, nstep_emit_flat, nstep_init,
                           replay_add, replay_init, replay_sample,
                           replay_update)
 from repro.replay import sharded as replay_sharded
-from repro.rl import apex, replay as replay_mod, sac as sac_mod, td3 as td3_mod
+from repro.rl import apex, policy as policy_mod
+from repro.rl import replay as replay_mod, sac as sac_mod, td3 as td3_mod
 from repro.rl.envs import EnvSpec, eval_returns, make_env
 
 _TRANSITION_FIELDS = ("obs", "act", "rew", "next_obs", "done")
@@ -113,36 +113,13 @@ def run_training(*_a, **_k):
 
 def _build(spec, env: EnvSpec):
     """Algorithm pieces for a (duck-typed) ``ExperimentSpec``: the algo
-    config with OFENet/obs knobs threaded in, plus init/update/policy fns."""
-    ofe_cfg: Optional[OFENetConfig] = None
-    if spec.ofenet.enabled:
-        ofe_cfg = spec.ofenet_config(env.obs_dim, env.act_dim)
-    n = spec.network
-    common = dict(obs_dim=env.obs_dim, act_dim=env.act_dim,
-                  num_units=n.num_units, num_layers=n.num_layers,
-                  connectivity=n.connectivity, activation=n.activation,
-                  block_backend=n.block_backend, ofenet=ofe_cfg,
-                  grad_norms=spec.obs.enabled and spec.obs.grad_norms)
+    config with OFENet/obs knobs threaded in, plus init/update fns. The
+    act/eval policy functions live in ``repro.rl.policy`` (the unified
+    inference layer) — the former four duck-typed closures are gone."""
+    acfg = policy_mod.algo_config(spec, env)
     if spec.algo == "sac":
-        acfg = sac_mod.SACConfig(**common)
-
-        def sample(params, s, key):
-            a, _ = sac_mod.sample_action(params, acfg, s, key)
-            return a
-
-        def mean(params, s):
-            return sac_mod.mean_action(params, acfg, s)
-        return acfg, sac_mod.sac_init, sac_mod.sac_update, sample, mean
-    acfg = td3_mod.TD3Config(**common)
-
-    def sample(params, s, key):
-        a = td3_mod.policy(params, acfg, s)
-        return jnp.clip(a + acfg.expl_noise * jax.random.normal(key, a.shape),
-                        -1, 1)
-
-    def mean(params, s):
-        return td3_mod.policy(params, acfg, s)
-    return acfg, td3_mod.td3_init, td3_mod.td3_update, sample, mean
+        return acfg, sac_mod.sac_init, sac_mod.sac_update
+    return acfg, td3_mod.td3_init, td3_mod.td3_update
 
 
 @dataclasses.dataclass
@@ -214,8 +191,13 @@ class Trainer:
         self.dispatches = 0
         self._chunks: Dict[tuple, Callable] = {}
         self.env = env = make_env(spec.env)
-        (self.acfg, self.init_fn, self.update_fn, sample_fn,
-         self.mean_fn) = _build(spec, env)
+        self.acfg, self.init_fn, self.update_fn = _build(spec, env)
+        # ONE inference surface for collect, eval and serving: the base
+        # Policy handle (params bound per call site). Its raw act fn drives
+        # collection inside the traced superstep; eval and external serving
+        # clients go through with_params (shared jit cache).
+        self.policy0 = policy_mod.Policy.from_algo(spec.algo, self.acfg,
+                                                   env_name=spec.env)
         self.n_actors = x.n_actors
         self.gamma = self.acfg.gamma
 
@@ -237,10 +219,7 @@ class Trainer:
         if not self.use_device and r.backend != "host":
             raise ValueError(r.backend)
 
-        def train_policy(params, obs, k):
-            return sample_fn(params, obs, k)
-
-        self._train_policy = train_policy
+        self._train_policy = self.policy0.act_fn
         self._rand_policy = apex.random_policy(env.act_dim)
 
         # ------------------------------------------------ replay backends
@@ -268,17 +247,24 @@ class Trainer:
         self._update_j = w(jax.jit(
             lambda st, b, k: self.update_fn(st, self.acfg, b, k)))
         self.eval_j = w(jax.jit(lambda params, k: eval_returns(
-            env, self.mean_fn, params, k, self.eval_episodes)))
+            env, self.policy0.with_params(params), k, self.eval_episodes)))
         if self.use_device:
             self._collect_add_j = w(jax.jit(partial(
-                self._op_collect_add, train_policy, steps=1, drop=0)))
+                self._op_collect_add, self._train_policy, steps=1, drop=0)))
             self._sample_j = w(jax.jit(self._op_sample))
             self._update_prio_j = w(jax.jit(self._op_update_prio))
         else:
             self._collect_emit_j = w(jax.jit(partial(
-                self._collect_emit, train_policy, steps=1, drop=0)))
+                self._collect_emit, self._train_policy, steps=1, drop=0)))
 
     # ------------------------------------------------------------- helpers
+    def policy(self, params=None) -> "policy_mod.Policy":
+        """The unified inference handle (``repro.rl.policy.Policy``) for
+        this Trainer's algorithm/network, bound to ``params`` when given.
+        Eval, the serving engine and external clients all act through it."""
+        return self.policy0 if params is None \
+            else self.policy0.with_params(params)
+
     def _count(self, fn):
         def wrapped(*args, **kwargs):
             self.dispatches += 1
@@ -530,9 +516,10 @@ class Trainer:
                 key, ke = jax.random.split(ls.key)
                 ls = ls._replace(key=key)
                 with jax.named_scope("repro.eval"):
-                    out["eval"] = eval_returns(self.env, self.mean_fn,
-                                               ls.agent["params"], ke,
-                                               self.eval_episodes)
+                    out["eval"] = eval_returns(
+                        self.env,
+                        self.policy0.with_params(ls.agent["params"]), ke,
+                        self.eval_episodes)
             return self._pin(ls), out
 
         self._chunks[sig] = self._count(jax.jit(chunk))

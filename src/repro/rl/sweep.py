@@ -387,9 +387,9 @@ class Fleet:
         def ev_true(f):
             def member_eval(ls_m):
                 key, ke = jax.random.split(ls_m.key)
-                rets = eval_returns(tr.env, tr.mean_fn,
-                                    ls_m.agent["params"], ke,
-                                    tr.eval_episodes)
+                rets = eval_returns(
+                    tr.env, tr.policy0.with_params(ls_m.agent["params"]),
+                    ke, tr.eval_episodes)
                 return key, rets
             return jax.vmap(member_eval)(f)
 

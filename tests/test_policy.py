@@ -1,0 +1,222 @@
+"""Unified Policy layer: the refactor must be INVISIBLE to training.
+
+The pre-refactor runner built four duck-typed closures (train/eval x
+SAC/TD3) and threaded ``policy_fn(params, obs)`` through
+``envs.eval_returns``. These tests re-implement those deleted closures
+VERBATIM as in-test references and pin the new ``Policy`` path to them
+bitwise — across the full matrix of algorithm x block backend — plus the
+handle's own contracts: single-obs batching, checkpoint round-trip,
+pytree behavior, and the shared compile cache ``with_params`` rebinds
+ride on (the serving hot-swap prerequisite).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.rl import Experiment, ExperimentSpec, Policy, make_env
+from repro.rl import sac as sac_mod, td3 as td3_mod
+from repro.rl.envs import rollout_return
+from repro.rl.policy import algo_config, load_params
+
+_BASE = dict(env="pendulum", num_units=16, num_layers=1, use_ofenet=False,
+             distributed=True, n_core=1, n_env=4, total_steps=12,
+             warmup_steps=8, eval_every=6, eval_episodes=2,
+             replay_capacity=256, batch_size=16)
+
+_MATRIX = [(algo, backend) for algo in ("sac", "td3")
+           for backend in ("jnp", "fused")]
+
+
+def _spec(algo, backend, **kw):
+    return ExperimentSpec().override(algo=algo, block_backend=backend,
+                                     **dict(_BASE, **kw))
+
+
+def _init_params(spec):
+    env = make_env(spec.env)
+    acfg = algo_config(spec, env)
+    init = sac_mod.sac_init if spec.algo == "sac" else td3_mod.td3_init
+    return env, acfg, init(jax.random.key(7), acfg)["params"]
+
+
+def _legacy_closures(algo, acfg):
+    """The runner's DELETED per-algo closures, re-implemented verbatim —
+    the bitwise reference the unified layer must match."""
+    if algo == "sac":
+        def train_policy(params, obs, key):
+            a, _ = sac_mod.sample_action(params, acfg, obs, key)
+            return a
+
+        def mean_fn(params, obs):
+            return sac_mod.mean_action(params, acfg, obs)
+    else:
+        def train_policy(params, obs, key):
+            a = td3_mod.policy(params, acfg, obs)
+            return jnp.clip(
+                a + acfg.expl_noise * jax.random.normal(key, a.shape),
+                -1, 1)
+
+        def mean_fn(params, obs):
+            return td3_mod.policy(params, acfg, obs)
+    return train_policy, mean_fn
+
+
+def _legacy_eval_returns(env, policy_fn, params, key, episodes):
+    """The pre-refactor ``envs.eval_returns``: ``policy_fn(params, obs)``
+    threaded next to a separate params argument."""
+    def one(i):
+        return rollout_return(env,
+                              lambda o: policy_fn(params, o[None])[0],
+                              jax.random.fold_in(key, i))
+
+    return jax.vmap(one)(jnp.arange(episodes))
+
+
+# -------------------------------------------------- bitwise parity matrix
+
+@pytest.mark.parametrize("algo,backend", _MATRIX)
+def test_eval_bitwise_parity(algo, backend):
+    """New path (``eval_returns(env, policy, key, n)``) == old path
+    (``policy_fn`` + params threading), bit for bit, host AND jitted —
+    the jitted case is the runner's ``eval_j`` / folded chunk eval."""
+    from repro.rl.envs import eval_returns
+    spec = _spec(algo, backend)
+    env, acfg, params = _init_params(spec)
+    _, mean_fn = _legacy_closures(algo, acfg)
+    pol = Policy.from_spec(spec, params, env=env)
+    key = jax.random.key(3)
+
+    old = _legacy_eval_returns(env, mean_fn, params, key, 3)
+    new = eval_returns(env, pol, key, 3)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    old_j = jax.jit(lambda p, k: _legacy_eval_returns(env, mean_fn, p,
+                                                      k, 3))(params, key)
+    new_j = jax.jit(lambda p, k: eval_returns(env, pol.with_params(p),
+                                              k, 3))(params, key)
+    np.testing.assert_array_equal(np.asarray(old_j), np.asarray(new_j))
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(old_j))
+
+
+@pytest.mark.parametrize("algo,backend", _MATRIX)
+def test_act_bitwise_parity(algo, backend):
+    """Collection actions (stochastic) and serving actions (deterministic)
+    through ``Policy`` == the deleted closures, on a batch."""
+    spec = _spec(algo, backend)
+    env, acfg, params = _init_params(spec)
+    train_policy, mean_fn = _legacy_closures(algo, acfg)
+    pol = Policy.from_spec(spec, params, env=env)
+    key = jax.random.key(11)
+    obs = jax.random.normal(jax.random.key(5), (4, env.obs_dim))
+
+    # the legacy closures only ever ran inside jitted programs (collect
+    # superstep, eval chunk), so the jitted closure is the reference —
+    # eager execution fuses differently and may differ in the last ulp
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(train_policy)(params, obs, key)),
+        np.asarray(pol.act(obs, key)))
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(mean_fn)(params, obs)),
+        np.asarray(pol.act_deterministic(obs)))
+    # the raw fns exposed to the training superstep ARE the references
+    np.testing.assert_array_equal(
+        np.asarray(train_policy(params, obs, key)),
+        np.asarray(pol.act_fn(params, obs, key)))
+
+
+@pytest.mark.parametrize("algo", ["sac", "td3"])
+def test_runner_eval_j_matches_legacy(algo):
+    """End-to-end: the Trainer's REAL jitted eval program (``eval_j``, now
+    routed through Policy) equals the legacy closure path bit for bit on
+    genuinely trained params — the refactor is invisible to training."""
+    spec = _spec(algo, "jnp")
+    exp = Experiment.from_spec(spec)
+    exp.run(12)
+    tr = exp.trainer
+    params = exp._ls.agent["params"]
+    _, mean_fn = _legacy_closures(algo, tr.acfg)
+    key = jax.random.key(42)
+    legacy = jax.jit(lambda p, k: _legacy_eval_returns(
+        tr.env, mean_fn, p, k, tr.eval_episodes))(params, key)
+    np.testing.assert_array_equal(np.asarray(legacy),
+                                  np.asarray(tr.eval_j(params, key)))
+
+
+# ------------------------------------------------------- handle contracts
+
+def test_single_obs_equals_batch_row():
+    spec = _spec("sac", "jnp")
+    env, _, params = _init_params(spec)
+    pol = Policy.from_spec(spec, params, env=env)
+    obs = np.linspace(-1, 1, env.obs_dim).astype(np.float32)
+    single = np.asarray(pol.act_deterministic(obs))
+    batch = np.asarray(pol.act_deterministic(np.stack([obs, obs])))
+    assert single.shape == (env.act_dim,)
+    np.testing.assert_allclose(single, batch[0], rtol=1e-6)
+    # stochastic single-obs acting works too (noise SHAPE depends on the
+    # batch shape, so no cross-batch row equality is claimed there)
+    a = np.asarray(pol.act(obs, jax.random.key(0)))
+    assert a.shape == (env.act_dim,) and np.all(np.abs(a) <= 1)
+
+
+def test_from_checkpoint_roundtrip(tmp_path):
+    spec = _spec("sac", "jnp")
+    exp = Experiment.from_spec(spec)
+    exp.run(12)
+    path = str(tmp_path / "ck.npz")
+    exp.save(path)
+    live = exp.policy()
+    restored = Policy.from_checkpoint(path)
+    assert restored.algo == "sac" and restored.obs_dim == live.obs_dim
+    obs = np.full(live.obs_dim, 0.3, np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(live.act_deterministic(obs)),
+        np.asarray(restored.act_deterministic(obs)))
+    # load_params restores ONLY the params subtree, matching the live tree
+    _, params = load_params(path)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(exp._ls.agent["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_with_params_shares_compile_cache():
+    """Rebinding params must NOT recompile — the hot-swap contract."""
+    spec = _spec("sac", "jnp")
+    env, _, params = _init_params(spec)
+    pol = Policy.from_spec(spec, params, env=env)
+    obs = np.asarray(jax.random.normal(jax.random.key(1),
+                                       (4, env.obs_dim)), np.float32)
+    pol.act_deterministic(obs)
+    before = pol.compile_counts["det"]
+    bumped = jax.tree_util.tree_map(lambda x: x * 2.0, params)
+    pol2 = pol.with_params(bumped)
+    out2 = pol2.act_deterministic(obs)
+    assert pol2.compile_counts["det"] == before
+    # and it really used the new params
+    assert not np.array_equal(np.asarray(out2),
+                              np.asarray(pol.act_deterministic(obs)))
+
+
+def test_policy_is_pytree():
+    """A Policy flows through jit/tree_map: params are the only leaves."""
+    spec = _spec("td3", "jnp")
+    env, _, params = _init_params(spec)
+    pol = Policy.from_spec(spec, params, env=env)
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    assert len(jax.tree_util.tree_leaves(pol)) == n_leaves
+    obs = np.zeros((2, env.obs_dim), np.float32)
+
+    @jax.jit
+    def through(p, o):
+        return p.act_deterministic(o)
+
+    np.testing.assert_array_equal(np.asarray(through(pol, obs)),
+                                  np.asarray(pol.act_deterministic(obs)))
+
+
+def test_unbound_policy_raises():
+    spec = _spec("sac", "jnp")
+    pol = Policy.from_spec(spec)
+    with pytest.raises(ValueError, match="no params bound"):
+        pol.act_deterministic(np.zeros(3, np.float32))

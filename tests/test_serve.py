@@ -1,0 +1,280 @@
+"""Continuous-batching policy server: correctness under concurrency.
+
+The serving contracts pinned here: responses equal a direct
+``Policy.act_deterministic`` call; a burst coalesces into batched ticks;
+the compile cache stays pinned to the padded batch-slot set (no
+per-batch-size recompiles); a param hot-swap lands atomically BETWEEN
+ticks (every response consistent with its stamped generation, zero drops)
+even under the ``repro.guard.chaos`` swap fault; ``close()`` drains; and
+the checkpoint watcher upgrades onto new verified checkpoints while
+skipping corrupt ones.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.guard import DurableStore, chaos
+from repro.launch.serve_policy import (PolicyServer, ServeConfig,
+                                       ServerClosed)
+from repro.rl import Experiment, ExperimentSpec, Policy, make_env
+from repro.rl.policy import algo_config
+from repro.rl import sac as sac_mod
+
+_BASE = dict(env="pendulum", algo="sac", num_units=16, num_layers=1,
+             use_ofenet=False, distributed=True, n_core=1, n_env=4,
+             total_steps=12, warmup_steps=8, eval_every=6, eval_episodes=1,
+             replay_capacity=256, batch_size=16)
+
+
+def _policy(seed=7):
+    spec = ExperimentSpec().override(**_BASE)
+    env = make_env(spec.env)
+    acfg = algo_config(spec, env)
+    params = sac_mod.sac_init(jax.random.key(seed), acfg)["params"]
+    return Policy.from_spec(spec, params, env=env), spec
+
+
+def _obs_batch(n, dim, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, dim)).astype(np.float32)
+
+
+# --------------------------------------------------------------- responses
+
+def test_responses_match_direct_policy():
+    """Concurrent client threads get the same actions a direct handle call
+    produces (padding rows are invisible to the demux)."""
+    pol, _ = _policy()
+    obs = _obs_batch(48, pol.obs_dim)
+    direct = np.asarray(pol.act_deterministic(obs))
+    out = np.zeros((48, pol.act_dim), np.float32)
+
+    with PolicyServer(pol, ServeConfig(max_batch=8)) as server:
+        def client(lo, hi):
+            for i in range(lo, hi):
+                out[i] = server.submit(obs[i], timeout=30.0)
+
+        threads = [threading.Thread(target=client, args=(j * 12, (j + 1) * 12))
+                   for j in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    np.testing.assert_allclose(out, direct, rtol=1e-5, atol=1e-6)
+    assert server.stats["requests"] == 48
+    assert server.stats["latencies_ms"], "latency accounting missing"
+
+
+def test_bad_obs_shape_rejected():
+    pol, _ = _policy()
+    server = PolicyServer(pol).start()
+    try:
+        with pytest.raises(ValueError, match="obs shape"):
+            server.submit_async(np.zeros((2, pol.obs_dim), np.float32))
+    finally:
+        server.close()
+
+
+def test_unbound_policy_rejected():
+    pol, _ = _policy()
+    with pytest.raises(ValueError, match="params-bound"):
+        PolicyServer(pol.with_params(None))
+
+
+# -------------------------------------------------------------- coalescing
+
+def test_burst_coalesces_into_batched_ticks():
+    """Requests queued before the batcher starts are served in max_batch
+    ticks, not one-by-one — the deterministic coalescing check."""
+    pol, _ = _policy()
+    server = PolicyServer(pol, ServeConfig(max_batch=8, max_wait_ms=50.0))
+    obs = _obs_batch(16, pol.obs_dim)
+    tickets = [server.submit_async(o) for o in obs]   # queued pre-start
+    server.start()
+    for t in tickets:
+        t.result(timeout=30.0)
+    server.close()
+    assert server.stats["requests"] == 16
+    assert server.stats["batch_hist"] == {8: 2}, server.stats["batch_hist"]
+
+
+def test_slot_padding_pins_compile_cache():
+    """Every tick pads to a batch SLOT: serving arbitrary batch sizes
+    costs at most one compile per slot, and re-serving the same sizes —
+    or hot-swapping params — compiles NOTHING new."""
+    pol, _ = _policy()
+    cfg = ServeConfig(max_batch=8, max_wait_ms=50.0)
+    assert cfg.batch_slots == (1, 2, 4, 8)
+    assert cfg.slot_for(3) == 4 and cfg.slot_for(8) == 8
+
+    def serve_burst(server, n):
+        obs = _obs_batch(n, pol.obs_dim, seed=n)
+        tickets = [server.submit_async(o) for o in obs]
+        server.start()
+        for t in tickets:
+            t.result(timeout=30.0)
+        server.close()
+
+    base = pol.compile_counts["det"]
+    serve_burst(PolicyServer(pol, cfg), 3)       # slot 4
+    serve_burst(PolicyServer(pol, cfg), 5)       # slots 4+1 or 8 ...
+    serve_burst(PolicyServer(pol, cfg), 8)       # slot 8
+    after = pol.compile_counts["det"]
+    assert after - base <= len(cfg.batch_slots)
+
+    # same sizes again, params swapped: ZERO new compiles
+    bumped = jax.tree_util.tree_map(lambda x: x * 1.5, pol.params)
+    serve_burst(PolicyServer(pol.with_params(bumped), cfg), 8)
+    serve_burst(PolicyServer(pol, cfg), 3)
+    assert pol.compile_counts["det"] == after
+
+
+# ---------------------------------------------------------------- hot-swap
+
+def _gen_policies(pol):
+    """Two visibly different parameter generations."""
+    bumped = jax.tree_util.tree_map(lambda x: x + 0.25, pol.params)
+    return {0: pol, 1: pol.with_params(bumped)}
+
+
+def test_hot_swap_atomic_no_mixed_generations():
+    """Swap mid-traffic: every response's action must equal the direct
+    computation under the generation STAMPED ON IT — responses never mix
+    param generations — and nothing is dropped."""
+    pol, _ = _policy()
+    gens = _gen_policies(pol)
+    obs = _obs_batch(96, pol.obs_dim)
+    results = [None] * 96
+
+    server = PolicyServer(pol, ServeConfig(max_batch=8)).start()
+
+    def client(lo, hi):
+        for i in range(lo, hi):
+            t = server.submit_async(obs[i])
+            results[i] = (t.result(timeout=30.0), t)
+
+    threads = [threading.Thread(target=client, args=(j * 24, (j + 1) * 24))
+               for j in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.01)
+    server.push_params(gens[1].params)            # swap under live traffic
+    for t in threads:
+        t.join()
+    server.close()
+
+    assert server.generation == 1 and server.stats["swaps"] == 1
+    seen_gens = set()
+    for i, (action, ticket) in enumerate(results):
+        assert action is not None, f"request {i} dropped"
+        g = ticket.generation
+        seen_gens.add(g)
+        want = np.asarray(gens[g].act_deterministic(obs[i]))
+        np.testing.assert_allclose(action, want, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"request {i} inconsistent with "
+                                           f"its generation {g}")
+    assert seen_gens <= {0, 1}
+
+
+def test_swap_fault_keeps_old_generation_serving():
+    """``chaos.arm_swap_fault``: the flip dies with params fully staged.
+    The server must keep serving the OLD generation (zero drops), count
+    the abort, and a later push must succeed once the fault heals."""
+    pol, _ = _policy()
+    gens = _gen_policies(pol)
+    obs = _obs_batch(8, pol.obs_dim)
+    server = PolicyServer(pol, ServeConfig(max_batch=4)).start()
+    latch = chaos.arm_swap_fault(server, fires=1)
+
+    server.push_params(gens[1].params)
+    a = np.stack([server.submit(o, timeout=30.0) for o in obs])
+    assert latch.count == 1 and server.stats["swap_aborts"] == 1
+    assert server.generation == 0, "aborted swap must not bump generation"
+    np.testing.assert_allclose(
+        a, np.asarray(gens[0].act_deterministic(obs)),
+        rtol=1e-5, atol=1e-6)
+
+    server.push_params(gens[1].params)            # latch exhausted: heals
+    b = np.stack([server.submit(o, timeout=30.0) for o in obs])
+    server.close()
+    assert server.generation == 1 and server.stats["swaps"] == 1
+    np.testing.assert_allclose(
+        b, np.asarray(gens[1].act_deterministic(obs)),
+        rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------- drain
+
+def test_close_drains_pending_requests():
+    pol, _ = _policy()
+    server = PolicyServer(pol, ServeConfig(max_batch=4, max_wait_ms=0.0))
+    tickets = [server.submit_async(o)
+               for o in _obs_batch(32, pol.obs_dim)]
+    server.start()
+    server.close()                                # must serve all 32 first
+    for t in tickets:
+        assert t.result(timeout=0) is not None
+    assert server.stats["requests"] == 32
+    with pytest.raises(ServerClosed):
+        server.submit(np.zeros(pol.obs_dim, np.float32))
+
+
+def test_close_without_drain_fails_pending():
+    pol, _ = _policy()
+    server = PolicyServer(pol)                    # batcher never started
+    tickets = [server.submit_async(o)
+               for o in _obs_batch(4, pol.obs_dim)]
+    server.close(drain=False)
+    for t in tickets:
+        with pytest.raises(ServerClosed):
+            t.result(timeout=1.0)
+
+
+# ----------------------------------------------------------------- watcher
+
+def _wait_for(pred, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.02)
+    return False
+
+
+def test_watcher_hot_swaps_and_skips_corrupt(tmp_path):
+    """End to end against a real DurableStore: serve checkpoint A, commit
+    checkpoint B (more training) -> server flips to B's params; corrupt
+    checkpoint C -> server reports it and keeps serving B."""
+    spec = ExperimentSpec().override(**_BASE)
+    exp = Experiment.from_spec(spec)
+    exp.run(12)
+    store = DurableStore(str(tmp_path / "ckpts"))
+    store.save(exp.save, step=12)
+
+    server = PolicyServer(exp.policy(), ServeConfig(poll_s=0.02))
+    server.start().watch(store, spec, seen_step=12)
+    obs = np.full(server.obs_dim, 0.2, np.float32)
+    a0 = server.submit(obs, timeout=30.0)
+
+    exp.run(6)                                    # params move on
+    pol_b = exp.policy()
+    store.save(exp.save, step=18)
+    assert _wait_for(lambda: server.generation == 1), "swap never landed"
+    a1 = server.submit(obs, timeout=30.0)
+    np.testing.assert_allclose(
+        a1, np.asarray(pol_b.act_deterministic(obs)), rtol=1e-5, atol=1e-6)
+    assert not np.array_equal(a0, a1)
+
+    exp.run(6)
+    bad = store.save(exp.save, step=24)
+    chaos.corrupt_checkpoint(bad)
+    assert _wait_for(lambda: server.stats["bad_checkpoints"] == 1), \
+        "corrupt checkpoint never detected"
+    a2 = server.submit(obs, timeout=30.0)
+    server.close()
+    exp.close()
+    assert server.generation == 1, "server swapped onto a CORRUPT checkpoint"
+    np.testing.assert_allclose(a2, a1, rtol=0, atol=0)

@@ -173,11 +173,15 @@ def test_eval_returns_matches_rollout_return():
     def policy(params, obs):
         return jnp.tanh(obs[..., :env.act_dim] + params)
 
+    # eval_returns consumes the policy duck-typed: anything without an
+    # .act_deterministic is treated as a bare obs -> action callable
+    def bound(o):
+        return policy(jnp.float32(0.25), o[None])[0]
+
     key = jax.random.key(3)
-    batched = eval_returns(env, policy, jnp.float32(0.25), key, 3)
-    legacy = [rollout_return(env, lambda o: policy(jnp.float32(0.25),
-                                                   o[None])[0],
-                             jax.random.fold_in(key, i)) for i in range(3)]
+    batched = eval_returns(env, bound, key, 3)
+    legacy = [rollout_return(env, bound, jax.random.fold_in(key, i))
+              for i in range(3)]
     np.testing.assert_allclose(np.asarray(batched), np.asarray(legacy),
                                rtol=1e-5)
 
